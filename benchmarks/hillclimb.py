@@ -1,0 +1,118 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb runner: compile a (arch x cell) with a named variant of
+PerfOptions, extract loop-corrected roofline terms, and append the iteration
+to results/perf.json.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch granite-8b \
+        --cell decode_32k --variant cache_seq_shard
+"""
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "perf.json"
+
+VARIANTS = {}
+
+
+def _variants():
+    global VARIANTS
+    if VARIANTS:
+        return VARIANTS
+    from repro.distributed.ctx import PerfOptions
+    VARIANTS = {
+        "baseline": PerfOptions(),
+        "cache_seq_shard": PerfOptions(cache_seq_shard=True),
+        "no_sp": PerfOptions(activation_sp=False),
+        "moe_a2a": PerfOptions(moe_dispatch_constraint=True),
+        "moe_a2a_no_sp": PerfOptions(moe_dispatch_constraint=True,
+                                     activation_sp=False),
+        "cap1": PerfOptions(capacity_factor=1.0),
+        "moe_a2a_cap1": PerfOptions(moe_dispatch_constraint=True,
+                                    capacity_factor=1.0),
+        "moe_a2a_cap1_no_sp": PerfOptions(moe_dispatch_constraint=True,
+                                          capacity_factor=1.0,
+                                          activation_sp=False),
+        "ep_local": PerfOptions(moe_ep_local=True),
+        "ep_local_no_sp": PerfOptions(moe_ep_local=True, activation_sp=False),
+        "ep_local_cap1": PerfOptions(moe_ep_local=True, capacity_factor=1.0),
+        "ep_local_cap1_no_sp": PerfOptions(moe_ep_local=True,
+                                           capacity_factor=1.0,
+                                           activation_sp=False),
+        "no_sp_onehot": PerfOptions(activation_sp=False, onehot_xent=True),
+        "onehot": PerfOptions(onehot_xent=True),
+        "seqshard_carry": PerfOptions(cache_seq_shard=True,
+                                      decode_cache_carry=True),
+        "carry_only": PerfOptions(decode_cache_carry=True),
+        "ep_local_onehot": PerfOptions(moe_ep_local=True, onehot_xent=True),
+        "ep_local_onehot_no_sp": PerfOptions(moe_ep_local=True,
+                                             onehot_xent=True,
+                                             activation_sp=False),
+        "no_sp_bf16chunk": PerfOptions(activation_sp=False, mlstm_bf16=True),
+    }
+    return VARIANTS
+
+
+def run(arch: str, cell: str, variant: str, multi_pod=False):
+    from repro.distributed import ctx
+    from repro.launch.dryrun import compile_cost
+    from repro.launch.loopfix import corrected_cell_costs
+    from repro.launch.roofline import RooflineTerms, model_flops_cell
+    from repro.configs import get_config, pad_for_tp
+    from repro.configs.base import SHAPE_CELLS
+
+    opts = _variants()[variant]
+    cellobj = next(c for c in SHAPE_CELLS if c.name == cell)
+    cfg = pad_for_tp(get_config(arch), 16)
+    with ctx.perf_options(opts):
+        out = corrected_cell_costs(arch, cell, multi_pod, compile_cost)
+        # also a full (scanned) compile for memory_analysis
+        from repro.launch.dryrun import _lower_for
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        compiled = _lower_for(cfg, cellobj, mesh).compile()
+        mem = compiled.memory_analysis()
+    chips = 512 if multi_pod else 256
+    terms = RooflineTerms(
+        arch=arch, cell=cell,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        hlo_flops=out["flops"] * chips, hlo_bytes=out["bytes"] * chips,
+        collective_bytes=out["coll"] * chips, collective_breakdown={},
+        model_flops=model_flops_cell(cfg, cellobj))
+    rec = {
+        "arch": arch, "cell": cell, "variant": variant,
+        "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "bottleneck": terms.bottleneck,
+        "useful": terms.useful_flops_ratio,
+        "roofline_fraction": terms.roofline_fraction,
+        "step_s": terms.step_s,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "args_gib": mem.argument_size_in_bytes / 2**30,
+    }
+    print(f"[{arch} x {cell} x {variant}] "
+          f"compute={terms.compute_s*1e3:.2f}ms memory={terms.memory_s*1e3:.2f}ms "
+          f"coll={terms.collective_s*1e3:.2f}ms step={terms.step_s*1e3:.2f}ms "
+          f"({terms.bottleneck}) frac={terms.roofline_fraction:.4f} "
+          f"temp={rec['temp_gib']:.1f}GiB")
+    hist = json.loads(RESULTS.read_text()) if RESULTS.exists() else []
+    hist = [h for h in hist if not (h["arch"] == arch and h["cell"] == cell
+                                    and h["variant"] == variant)]
+    hist.append(rec)
+    RESULTS.write_text(json.dumps(hist, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run(args.arch, args.cell, args.variant, args.multi_pod)
+
+
+if __name__ == "__main__":
+    import os
+    main()

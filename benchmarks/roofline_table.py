@@ -1,0 +1,103 @@
+"""Render the §Roofline table from results/dryrun.json (single-pod cells)
+and pick hillclimb candidates.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single|multi]
+"""
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+
+
+def fmt_s(x):
+    return f"{x*1e3:9.2f}ms"
+
+
+def load_rows(mesh="single"):
+    import os
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro.configs import get_config, pad_for_tp
+    from repro.configs.base import SHAPE_CELLS
+    from repro.launch.roofline import min_traffic_bytes, HBM_BW
+
+    d = json.loads(RESULTS.read_text())
+    rows = []
+    for key, v in sorted(d.items()):
+        arch, cell, m = key.split("|")
+        if m != mesh:
+            continue
+        if v.get("status") == "skipped":
+            rows.append({"arch": arch, "cell": cell, "skipped": True,
+                         "reason": v["reason"]})
+            continue
+        if v.get("status") != "ok":
+            continue
+        r = v["roofline"]
+        cfg = pad_for_tp(get_config(arch), 16)
+        cellobj = next(c for c in SHAPE_CELLS if c.name == cell)
+        chips = r["chips"]
+        floor_s = min_traffic_bytes(cfg, cellobj) / (chips * HBM_BW)
+        rows.append({
+            "arch": arch, "cell": cell, "skipped": False,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "useful": r["useful_flops_ratio"],
+            "frac": r["roofline_fraction"],
+            "flops": r["hlo_flops"], "bytes": r["hlo_bytes"],
+            "coll": r["collective_bytes"],
+            "model_flops": r["model_flops"],
+            "floor_s": floor_s,
+            "corrected": "loopfix" in v,
+            "temp_gib": v["memory"]["temp_bytes_per_device"] / 2**30,
+            "args_gib": v["memory"]["argument_bytes_per_device"] / 2**30,
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh)
+    hdr = ["arch", "cell", "compute", "memory", "collective", "floor",
+           "bound", "useful", "roofline_frac", "temp_GiB"]
+    if args.markdown:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{'arch':22s} {'cell':12s} {'compute':>10s} {'memory':>10s} "
+              f"{'collect':>10s} {'floor':>9s} {'bound':>10s} {'useful':>7s} "
+              f"{'frac':>7s} {'tempGiB':>8s}")
+    for r in rows:
+        if r["skipped"]:
+            line = [r["arch"], r["cell"]] + ["-"] * 3 + ["-", "SKIP", "-",
+                                                         "-", "-"]
+        else:
+            line = [r["arch"], r["cell"], fmt_s(r["compute_s"]).strip(),
+                    fmt_s(r["memory_s"]).strip(),
+                    fmt_s(r["collective_s"]).strip(),
+                    fmt_s(r["floor_s"]).strip(), r["bottleneck"],
+                    f"{r['useful']:.2f}", f"{r['frac']:.4f}",
+                    f"{r['temp_gib']:.1f}"]
+        if args.markdown:
+            print("| " + " | ".join(str(x) for x in line) + " |")
+        else:
+            print(f"{line[0]:22s} {line[1]:12s} {line[2]:>10s} {line[3]:>10s} "
+                  f"{line[4]:>10s} {line[5]:>9s} {line[6]:>10s} {line[7]:>7s} "
+                  f"{line[8]:>7s} {line[9]:>8s}")
+    live = [r for r in rows if not r["skipped"]]
+    if live:
+        worst = min(live, key=lambda r: r["frac"])
+        coll = max(live, key=lambda r: r["collective_s"] /
+                   max(r["memory_s"], r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction : {worst['arch']} x {worst['cell']}"
+              f" (frac={worst['frac']:.4f})")
+        print(f"most collective-bound   : {coll['arch']} x {coll['cell']}"
+              f" (coll/max(other)={coll['collective_s']/max(coll['memory_s'], coll['compute_s'], 1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

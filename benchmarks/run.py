@@ -1,0 +1,311 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the paper-comparable
+ratio for that table). Measured numbers come from this CPU container where a
+real measurement is meaningful (kernel-launch overheads, switching engine,
+fusion wall-time); cross-machine latency/footprint projections come from the
+calibrated bandwidth model (core/bandwidth_model.py) with the paper's own
+hardware constants — the analytic path the paper itself uses for its DGX
+comparisons (§VI-C).
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run --only fig11
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def _timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6      # us
+
+
+# ----------------------------------------------------------------------
+# Table I: operational intensity vs fusion level (Monarch FFT pipeline)
+# ----------------------------------------------------------------------
+def bench_table1_intensity():
+    """Paper Table I (39.5 / 102.6 / 410.4 flops/byte for their 1M-point
+    Monarch). Our ledger uses N1=N2=256 factor matrices; the absolute
+    numbers depend on factor size / dtype (unstated in the paper) — the
+    reproduced CLAIM is the ordering and that fusion crosses the ~150
+    flops/byte memory/compute boundary (A100 ridge point)."""
+    from repro.kernels.monarch_fft import operational_intensity, monarch, ref
+    for level in ("none", "gemm0_mul_t", "full"):
+        oi = operational_intensity(16, 256, 256, fusion=level)
+        emit(f"table1_intensity_{level}", 0.0,
+             f"OI={oi:.1f}flops/byte,{'compute' if oi > 150 else 'memory'}"
+             f"-bound_on_A100")
+    # measured: fused (one jit) vs op-by-op with host dispatch between
+    B, N1, N2 = 16, 256, 256
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    x = jax.random.normal(ks[0], (B, N1, N2))
+    w0 = jax.random.normal(ks[1], (N1, N1)) / np.sqrt(N1)
+    tw = jax.random.normal(ks[2], (N1, N2))
+    w1 = jax.random.normal(ks[3], (N2, N2)) / np.sqrt(N2)
+    fused = jax.jit(lambda x: ref.monarch_ref(x, w0, tw, w1))
+    j_g0 = jax.jit(lambda x: jnp.einsum("ij,bjk->bik", w0, x))
+    j_mul = jax.jit(lambda a: a * tw)
+    j_t = jax.jit(lambda a: a.transpose(0, 2, 1))
+    j_g1 = jax.jit(lambda at: jnp.einsum("ij,bjk->bik", w1, at))
+    def unfused():
+        a = j_g0(x); jax.block_until_ready(a)
+        a = j_mul(a); jax.block_until_ready(a)
+        a = j_t(a); jax.block_until_ready(a)
+        return j_g1(a)
+    tf = _timeit(lambda: fused(x))
+    tu = _timeit(unfused)
+    emit("table1_measured_fused", tf, f"speedup={tu/tf:.2f}x_vs_unfused")
+
+
+# ----------------------------------------------------------------------
+# Fig 10: fused vs unfused speedup per benchmark (decode/prefill/train)
+# ----------------------------------------------------------------------
+def bench_fig10_fusion_speedup():
+    """Wall-clock: whole fused decoder-layer decode step as ONE jit vs one
+    jit per op with host dispatch between (the paper's unfused baseline)."""
+    from repro.kernels.fused_decode import ref as fd
+    B, D, n_q, n_kv, dh, F, S = 8, 512, 8, 2, 64, 2048, 1024
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 8)
+    x = jax.random.normal(ks[0], (B, D), jnp.float32)
+    p = {
+        "attn_norm": jnp.ones(D), "mlp_norm": jnp.ones(D),
+        "w_qkv": jax.random.normal(ks[1], (D, (n_q + 2 * n_kv) * dh)) / 23,
+        "w_o": jax.random.normal(ks[2], (n_q * dh, D)) / 23,
+        "w_gate": jax.random.normal(ks[3], (D, F)) / 23,
+        "w_up": jax.random.normal(ks[4], (D, F)) / 23,
+        "w_down": jax.random.normal(ks[5], (F, D)) / 45,
+    }
+    kc = jax.random.normal(ks[6], (B, S, n_kv, dh))
+    vc = jax.random.normal(ks[7], (B, S, n_kv, dh))
+    pos = jnp.int32(S - 1)
+
+    fused = jax.jit(lambda x, kc, vc: fd.decoder_layer_step_ref(
+        x, p, kc, vc, pos, n_q=n_q, n_kv=n_kv, dh=dh))
+
+    j_qkv = jax.jit(lambda x: fd.qkv_rope_ref(x, p["attn_norm"], p["w_qkv"],
+                                              pos, n_q=n_q, n_kv=n_kv, dh=dh))
+    j_dus = jax.jit(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+        c, u, i, 1))
+    from repro.kernels.flash_attention.ref import decode_attention_ref
+    j_attn = jax.jit(decode_attention_ref)
+    j_oproj = jax.jit(lambda x, o: x + (o.reshape(B, n_q * dh) @ p["w_o"]))
+    j_ffn = jax.jit(lambda x: fd.ffn_swiglu_ref(x, p["mlp_norm"], p["w_gate"],
+                                                p["w_up"], p["w_down"]))
+
+    def unfused(x, kc, vc):
+        qkv = j_qkv(x); jax.block_until_ready(qkv)
+        q = qkv[:n_q].transpose(1, 0, 2)
+        kk = qkv[n_q:n_q + n_kv].transpose(1, 0, 2)
+        vv = qkv[n_q + n_kv:].transpose(1, 0, 2)
+        kc = j_dus(kc, kk[:, None], pos); jax.block_until_ready(kc)
+        vc = j_dus(vc, vv[:, None], pos); jax.block_until_ready(vc)
+        o = j_attn(q, kc, vc, pos + 1); jax.block_until_ready(o)
+        y = j_oproj(x, o); jax.block_until_ready(y)
+        return j_ffn(y)
+
+    tf = _timeit(lambda: fused(x, kc, vc)[0])
+    tu = _timeit(lambda: unfused(x, kc, vc))
+    emit("fig10_decode_layer_fused", tf, f"speedup={tu/tf:.2f}x_vs_unfused")
+
+    # model-level analytic HBM-traffic ratios. Decode is weight/cache-bound
+    # (ratio near the paper's low end); prefill/train materialize large
+    # activations unfused (the paper's 2-3x regime).
+    from repro.configs import get_config
+    from repro.core.fusion import model_fusion_report
+    cases = [("samba-coe-expert-7b", 8, 4096, 1, "decode"),
+             ("mixtral-8x7b", 8, 4096, 1, "decode"),
+             ("samba-coe-expert-7b", 8, 4096, 4096, "prefill"),
+             ("qwen2.5-32b", 8, 4096, 4096, "prefill")]
+    for arch, b, ctx, seq, kind in cases:
+        rep = model_fusion_report(get_config(arch), batch=b, ctx=ctx, seq=seq)
+        emit(f"fig10_model_{arch}_{kind}", 0.0,
+             f"hbm_traffic_ratio={rep.traffic_ratio:.2f}x,"
+             f"launch_ratio={rep.launch_ratio:.1f}x")
+
+
+# ----------------------------------------------------------------------
+# Fig 11: kernel-call ratio unfused/fused
+# ----------------------------------------------------------------------
+def bench_fig11_kernel_calls():
+    from repro.configs import get_config
+    from repro.core.fusion import model_fusion_report
+    cases = [
+        ("llama7B-4k-decode", "samba-coe-expert-7b", 8, 4096),
+        ("llama7B-4k-prefill", "samba-coe-expert-7b", 8, 1),
+        ("mixtral-decode", "mixtral-8x7b", 8, 4096),
+        ("qwen32B-decode", "qwen2.5-32b", 8, 32768),
+        ("deepseek-decode", "deepseek-v2-lite-16b", 8, 32768),
+    ]
+    for name, arch, b, ctx in cases:
+        rep = model_fusion_report(get_config(arch), batch=b, ctx=ctx)
+        emit(f"fig11_{name}", 0.0,
+             f"launch_ratio={rep.launch_ratio:.1f}x"
+             f"({rep.unfused_kernels}->{rep.fused_kernels})")
+
+
+# ----------------------------------------------------------------------
+# Fig 12 + Table V: CoE latency vs expert count, cross-machine
+# ----------------------------------------------------------------------
+def bench_fig12_tableV_coe_latency():
+    """Fig 12: latency to generate 20 tokens (BS=8) vs the number of experts
+    HOSTED on one node. Below HBM capacity all experts are resident; above
+    it the LRU misses scale with 1 - resident/hosted (the paper's spike when
+    experts spill past HBM). Table V ratios are read off the 150-expert
+    point — the Samba-CoE deployment size."""
+    from repro.core import DGX_A100, DGX_H100, SN40L_NODE, TPU_V5E_NODE
+    from repro.core.bandwidth_model import coe_latency, decode_step_cost
+
+    seven_b = int(7e9)
+    bytes_7b = seven_b * 2
+    kv_ctx = 2 * 32 * 4096 * 128 * 2          # llama2-7B KV @4k
+    hosted_pts = (10, 50, 150, 850)
+    n_used = 8                                 # BS=8, distinct experts
+    out = {}
+    for machine in (SN40L_NODE, DGX_A100, DGX_H100, TPU_V5E_NODE):
+        resident_cap = int(machine.hbm.capacity * machine.sockets_per_node
+                           * 0.92 // bytes_7b)
+        curve = []
+        for hosted in hosted_pts:
+            resident = min(hosted, resident_cap)
+            hit = resident / hosted
+            dc = decode_step_cost(seven_b, kv_ctx, n_used, machine)
+            lat = coe_latency(n_used, bytes_7b,
+                              int(round(n_used * hit)), dc, 20, machine)
+            curve.append(lat["total_s"])
+        out[machine.name] = curve
+        emit(f"fig12_latency_{machine.name}",
+             curve[hosted_pts.index(150)] * 1e6,
+             "curve_s=" + "/".join("%.3f" % c for c in curve) +
+             f"_at_experts={hosted_pts}")
+    i150 = hosted_pts.index(150)
+    for key, label in (("dgx-a100", "vs_dgx_a100"), ("dgx-h100", "vs_dgx_h100")):
+        emit(f"tableV_overall_speedup_{label}", 0.0,
+             f"{out[key][i150]/out['sn40l'][i150]:.1f}x_at_150_experts")
+    from repro.core.bandwidth_model import switch_cost
+    emit("tableV_switch_speedup", 0.0,
+         f"vs_a100={switch_cost(bytes_7b, DGX_A100)/switch_cost(bytes_7b, SN40L_NODE):.0f}x,"
+         f"vs_h100={switch_cost(bytes_7b, DGX_H100)/switch_cost(bytes_7b, SN40L_NODE):.0f}x")
+    # the TPU deployment this framework targets, same workload
+    emit("tableV_tpu_v5e_vs_dgx_a100", 0.0,
+         f"{out['dgx-a100'][i150]/out['tpu-v5e'][i150]:.1f}x_at_150_experts")
+
+
+# ----------------------------------------------------------------------
+# Fig 13: system footprint vs expert count
+# ----------------------------------------------------------------------
+def bench_fig13_footprint():
+    from repro.core import DGX_A100, DGX_H100, SN40L_NODE
+    from repro.core.bandwidth_model import footprint_nodes
+    bytes_7b = int(7e9) * 2
+    for n in (50, 150, 425, 850):
+        sn = footprint_nodes(n, bytes_7b, SN40L_NODE, use_capacity_tier=True)
+        da = footprint_nodes(n, bytes_7b, DGX_A100, use_capacity_tier=False)
+        dh = footprint_nodes(n, bytes_7b, DGX_H100, use_capacity_tier=False)
+        emit(f"fig13_footprint_{n}experts", 0.0,
+             f"sn40l={sn},dgx_a100={da},dgx_h100={dh},ratio={da/sn:.0f}x")
+
+
+# ----------------------------------------------------------------------
+# Table IV: decode throughput (tokens/s/user) roofline projections
+# ----------------------------------------------------------------------
+def bench_tableIV_decode_throughput():
+    from repro.configs import get_config
+    from repro.core import SN40L_NODE, TPU_V5E_NODE
+    from repro.core.bandwidth_model import decode_step_cost
+    cases = [("llama31-8b-class", "granite-8b", 16),
+             ("llama31-70b-class", "qwen2.5-32b", 16),
+             ("llama2-7b-expert", "samba-coe-expert-7b", 8)]
+    for name, arch, tp in cases:
+        cfg = get_config(arch)
+        n = cfg.n_active_params()
+        kv_ctx = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 8192 * 2
+        for machine in (SN40L_NODE, TPU_V5E_NODE):
+            dc = decode_step_cost(n, kv_ctx, 1, machine, tp=tp)
+            tput = 1.0 / dc.step_s
+            emit(f"tableIV_{name}_{machine.name}", dc.step_s * 1e6,
+                 f"tokens/s/user={tput:.0f},bound={dc.bottleneck}")
+
+
+# ----------------------------------------------------------------------
+# Fig 1: measured switch vs execute breakdown on THIS machine
+# ----------------------------------------------------------------------
+def bench_fig1_switching_measured():
+    from repro.configs import get_config, reduced
+    from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+    from repro.models import get_model
+    from repro.serving import Request, ServingEngine
+    cfg = reduced(get_config("samba-coe-expert-7b"))
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    experts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+               for i in range(4)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+    coe = CompositionOfExperts(HashRouter(4), None, int(2.5 * nbytes))
+    for i, h in enumerate(experts):
+        coe.register(ExpertHandle(f"e{i}", cfg, h))
+    eng = ServingEngine(coe, cfg, max_len=40)
+    rs = np.random.RandomState(0)
+    for i in range(8):
+        eng.submit(Request(rid=i, tokens=rs.randint(
+            0, cfg.vocab_size, (32,)).astype(np.int32), max_new_tokens=8))
+    eng.step()
+    st = eng.stats
+    total = st.switch_s + st.exec_s + st.route_s
+    emit("fig1_measured_breakdown", total * 1e6,
+         f"switch%={100*st.switch_s/total:.1f},exec%={100*st.exec_s/total:.1f},"
+         f"hits={coe.cache.stats.hits},misses={coe.cache.stats.misses}")
+    bw = coe.cache.stats.bytes_copied_in / max(coe.cache.stats.switch_seconds,
+                                               1e-9)
+    emit("fig1_measured_copy_bw", coe.cache.stats.switch_seconds * 1e6,
+         f"host_to_device_GBps={bw/1e9:.2f}")
+
+
+# ----------------------------------------------------------------------
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    benches = {
+        "table1": bench_table1_intensity,
+        "fig10": bench_fig10_fusion_speedup,
+        "fig11": bench_fig11_kernel_calls,
+        "fig12": bench_fig12_tableV_coe_latency,
+        "fig13": bench_fig13_footprint,
+        "tableIV": bench_tableIV_decode_throughput,
+        "fig1": bench_fig1_switching_measured,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        fn()
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "benchmarks.csv").write_text("\n".join(ROWS) + "\n")
+
+
+if __name__ == "__main__":
+    main()

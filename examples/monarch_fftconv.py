@@ -1,0 +1,75 @@
+"""FlashFFTConv / Monarch showcase (paper Fig 3-4, Table I, 13x claim).
+
+Runs the fused Monarch pipeline kernel (Gemm0 -> Mul -> Transpose -> Gemm1)
+and the fully-fused FFT-conv kernel against the op-by-op baseline, printing
+the operational-intensity ledger and the measured wall-time ratio.
+
+    PYTHONPATH=src python examples/monarch_fftconv.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.monarch_fft import (monarch, monarch_conv,
+                                       operational_intensity, ref)
+
+
+def timeit(fn, n=5):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    print("Table I — operational intensity of the Fig-3 pipeline "
+          "(1M-point Monarch, bf16):")
+    for level, label in [("none", "No fusion"),
+                         ("gemm0_mul_t", "Gemm0-Mul-Transpose"),
+                         ("full", "Fully spatially fused")]:
+        oi = operational_intensity(16, 1024, 1024, fusion=level)
+        print(f"  {label:24s} {oi:8.1f} flops/byte")
+
+    B, N1, N2 = 4, 128, 128
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 8)
+    x = jax.random.normal(ks[0], (B, N1, N2))
+    w0 = jax.random.normal(ks[1], (N1, N1)) / np.sqrt(N1)
+    tw = jax.random.normal(ks[2], (N1, N2))
+    w1 = jax.random.normal(ks[3], (N2, N2)) / np.sqrt(N2)
+
+    out = monarch(x, w0, tw, w1)
+    exp = ref.monarch_ref(x, w0, tw, w1)
+    print(f"\nfused Pallas kernel vs oracle: max_err="
+          f"{float(jnp.max(jnp.abs(out - exp))):.2e}")
+
+    filt = jax.random.normal(ks[4], (N2, N1))
+    w0i = jax.random.normal(ks[5], (N2, N2)) / np.sqrt(N2)
+    twi = jax.random.normal(ks[6], (N2, N1))
+    w1i = jax.random.normal(ks[7], (N1, N1)) / np.sqrt(N1)
+    outc = monarch_conv(x, w0, tw, w1, filt, w0i, twi, w1i)
+    expc = ref.monarch_conv_ref(x, w0, tw, w1, filt, w0i, twi, w1i)
+    print(f"fused FFT-conv (6 ops, ONE kernel call) vs oracle: max_err="
+          f"{float(jnp.max(jnp.abs(outc - expc))):.2e}")
+
+    # measured: single fused jit vs op-by-op materialization
+    fused = jax.jit(lambda: ref.monarch_conv_ref(x, w0, tw, w1, filt, w0i,
+                                                 twi, w1i))
+    j1 = jax.jit(lambda: ref.monarch_unfused_ref(x, w0, tw, w1))
+    j2 = jax.jit(lambda f: f * filt)
+    j3 = jax.jit(lambda f: ref.monarch_unfused_ref(f, w0i, twi, w1i))
+    def unfused():
+        f = j1(); jax.block_until_ready(f)
+        f = j2(f); jax.block_until_ready(f)
+        return j3(f)
+    tf, tu = timeit(fused), timeit(unfused)
+    print(f"\nmeasured (CPU, XLA-fusion analogue of the spatial fusion): "
+          f"fused {tf*1e6:.0f}us vs unfused {tu*1e6:.0f}us "
+          f"-> {tu/tf:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Train an expert end-to-end: ~100M-parameter dense model, a few hundred
+steps with checkpoint/restart (the CoE story: experts are trained/fine-tuned
+independently, then registered into the composition).
+
+    PYTHONPATH=src python examples/train_expert.py --steps 200
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, make_source
+from repro.distributed import stepfn
+from repro.launch.mesh import single_device_mesh
+from repro.models import get_model
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_expert_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param llama-style expert
+    cfg = dataclasses.replace(
+        get_config("samba-coe-expert-7b"),
+        name="expert-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=8,
+        head_dim=64, d_ff=1536, vocab_size=32000, attn_chunk=128)
+    model = get_model(cfg)
+    print(f"training {cfg.name}: {cfg.n_params()/1e6:.1f}M params")
+
+    mesh = single_device_mesh()
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20, decay_steps=args.steps)
+    step_fn, state_sh, _ = stepfn.make_train_step(cfg, mesh, opt_cfg)
+    source = make_source(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch))
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        state = jax.device_put({"params": params,
+                                "opt": init_opt_state(params)}, state_sh)
+        restored, start = ckpt.restore_state(state, state_sh)
+        if restored is not None:
+            state = restored
+            print(f"resumed from step {start}")
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, source.batch_at(step))
+            state, metrics = step_fn(state, batch)
+            if step % 20 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                      f"lr={float(metrics['lr']):.2e}")
+            if (step + 1) % 100 == 0:
+                ckpt.save(step + 1, state)
+                print(f"checkpointed step {step+1}")
+        ckpt.save(args.steps, state)
+    print("done — register this expert into a CoE with "
+          "examples/coe_serving.py")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Atomic, mesh-elastic checkpointing (fault tolerance / elastic scaling).
+
+Checkpoints are keyed by the *logical* parameter tree, not by mesh layout:
+arrays are gathered to host and written per-leaf as .npy inside a staging
+dir, then atomically renamed. Restore re-shards onto whatever mesh the new
+job runs (different chip count, different topology) — the elastic-restart
+path. A retention policy keeps the last K checkpoints; a 'latest' marker
+file is written last so a crash mid-write can never corrupt restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._async_thread = None
+
+    # -- async save (training never blocks on the filesystem) -------------
+    def save_async(self, step: int, state: Any, extra: Optional[Dict] = None):
+        """Device->host transfer happens now (cheap, async dispatch); the
+        filesystem write runs on a background thread. Joins any previous
+        in-flight save first (at most one outstanding)."""
+        import threading
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self.save, args=(step, host_state, extra), daemon=True)
+        self._async_thread.start()
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # -- save ------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None):
+        stage = self.dir / f".tmp-{step}-{os.getpid()}"
+        final = self.dir / f"step-{step:09d}"
+        if stage.exists():
+            shutil.rmtree(stage)
+        stage.mkdir(parents=True)
+        flat, _ = _flatten(state)
+        manifest = {"step": step, "keys": [], "time": time.time(),
+                    "extra": extra or {}}
+        for key, leaf in flat.items():
+            host = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(host.dtype)
+            if host.dtype.kind == "V" or "bfloat16" in logical_dtype:
+                # numpy has no native bfloat16: persist the bit pattern
+                logical_dtype = "bfloat16"
+                host = host.view(np.uint16)
+            fn = key.replace("/", "__") + ".npy"
+            np.save(stage / fn, host)
+            manifest["keys"].append({"key": key, "file": fn,
+                                     "shape": list(host.shape),
+                                     "dtype": logical_dtype})
+        (stage / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        stage.rename(final)                       # atomic publish
+        (self.dir / "latest").write_text(final.name)
+        self._gc()
+        return final
+
+    def _gc(self):
+        ckpts = sorted(self.dir.glob("step-*"))
+        for old in ckpts[: max(0, len(ckpts) - self.keep)]:
+            shutil.rmtree(old)
+
+    # -- restore -----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        marker = self.dir / "latest"
+        if not marker.exists():
+            return None
+        name = marker.read_text().strip()
+        if not (self.dir / name).exists():
+            ckpts = sorted(self.dir.glob("step-*"))
+            if not ckpts:
+                return None
+            name = ckpts[-1].name
+        return int(name.split("-")[1])
+
+    def restore(self, step: Optional[int], like: Any, shardings: Any = None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings`` (same structure) re-shards onto the
+        current mesh — elastic restore onto any topology."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        final = self.dir / f"step-{step:09d}"
+        manifest = json.loads((final / "manifest.json").read_text())
+        by_key = {e["key"]: e for e in manifest["keys"]}
+        flat_like, treedef = _flatten(like)
+        leaves = {}
+        for key, leaf in flat_like.items():
+            ent = by_key[key]
+            host = np.load(final / ent["file"])
+            if ent["dtype"] == "bfloat16":
+                import ml_dtypes
+                host = host.view(ml_dtypes.bfloat16)
+            leaves[key] = host
+        flat_sh = _flatten(shardings)[0] if shardings is not None else None
+        ordered = []
+        flat2, treedef2 = jax.tree_util.tree_flatten_with_path(like)
+        for path, _ in flat2:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            host = leaves[key]
+            if flat_sh is not None:
+                ordered.append(jax.device_put(host, flat_sh[key]))
+            else:
+                ordered.append(jax.numpy.asarray(host))
+        return jax.tree_util.tree_unflatten(treedef2, ordered), manifest
+
+    def restore_state(self, like, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, 0
+        state, manifest = self.restore(step, like, shardings)
+        return state, manifest["step"]

@@ -1,0 +1,53 @@
+"""Architecture config registry. ``get_config(arch_id)`` accepts the assigned ids."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeCell,
+    SHAPE_CELLS,
+    cell_applicable,
+    pad_for_tp,
+    reduced,
+)
+
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2_vl_2b
+from repro.configs.whisper_small import CONFIG as _whisper_small
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _deepseek_v2_lite_16b
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral_8x7b
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2_3b
+from repro.configs.qwen2_5_32b import CONFIG as _qwen2_5_32b
+from repro.configs.granite_8b import CONFIG as _granite_8b
+from repro.configs.chatglm3_6b import CONFIG as _chatglm3_6b
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma_9b
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm_1_3b
+from repro.configs.samba_coe_expert import CONFIG as _samba_coe_expert
+
+CONFIGS = {
+    "qwen2-vl-2b": _qwen2_vl_2b,
+    "whisper-small": _whisper_small,
+    "deepseek-v2-lite-16b": _deepseek_v2_lite_16b,
+    "mixtral-8x7b": _mixtral_8x7b,
+    "starcoder2-3b": _starcoder2_3b,
+    "qwen2.5-32b": _qwen2_5_32b,
+    "granite-8b": _granite_8b,
+    "chatglm3-6b": _chatglm3_6b,
+    "recurrentgemma-9b": _recurrentgemma_9b,
+    "xlstm-1.3b": _xlstm_1_3b,
+    # the paper's own expert/router base (Llama2-7B-class, §II)
+    "samba-coe-expert-7b": _samba_coe_expert,
+}
+
+ARCH_IDS = tuple(k for k in CONFIGS if k != "samba-coe-expert-7b")
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("_", "-").lower()
+    if key not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(CONFIGS)}")
+    return CONFIGS[key]
+
+
+__all__ = [
+    "ModelConfig", "ShapeCell", "SHAPE_CELLS", "cell_applicable",
+    "pad_for_tp", "reduced", "CONFIGS", "ARCH_IDS", "get_config",
+]

@@ -1,0 +1,253 @@
+"""Config system: ModelConfig covers every assigned architecture family.
+
+Families:
+  dense    : decoder-only transformer (llama/qwen/starcoder/chatglm/granite)
+  moe      : decoder-only with MoE FFN (mixtral)
+  mla_moe  : MLA attention + MoE FFN (deepseek-v2-lite)
+  encdec   : encoder-decoder (whisper)
+  rglru    : RG-LRU + local-attention hybrid (recurrentgemma)
+  xlstm    : mLSTM/sLSTM blocks (xlstm)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- normalization / activation / projections ---
+    norm: str = "rms"                 # 'rms' | 'ln'
+    act: str = "swiglu"               # 'swiglu' | 'gelu' | 'geglu'
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+
+    # --- rope ---
+    rope_style: str = "full"          # 'full' | 'partial' | 'mrope' | 'none'
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0        # 'partial': fraction of head_dim rotated
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl: (t, h, w) half-dim sections
+
+    # --- attention ---
+    sliding_window: int = 0           # >0: SWA (mixtral / rglru local attn)
+    attn_chunk: int = 1024            # chunked-attention block for long seq
+    attn_logit_softcap: float = 0.0
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden
+    first_dense_layers: int = 0       # deepseek: first k layers use dense FFN
+    routed_scale: float = 1.0
+    capacity_factor: float = 1.25
+
+    # --- MLA (deepseek) ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0              # precomputed frame embeddings length
+
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ('rec','rec','attn')
+    d_rnn: int = 0
+    conv_width: int = 4
+
+    # --- xlstm ---
+    slstm_every: int = 0              # every Nth block is sLSTM (0 = none)
+    mlstm_proj_factor: float = 2.0
+    slstm_heads: int = 4
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+
+    # --- modality frontend stub ---
+    frontend: str = "none"            # 'none' | 'vision' | 'audio'
+
+    # --- deployment padding accounting (set by pad_for_tp) ---
+    orig_n_heads: int = 0
+    orig_n_kv_heads: int = 0
+    orig_vocab_size: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        if self.family == "mla_moe":
+            return self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "xlstm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode with bounded state."""
+        if self.family in ("rglru", "xlstm"):
+            return True
+        if self.sliding_window > 0:
+            return True
+        return False
+
+    @property
+    def has_decode(self) -> bool:
+        return True   # all assigned archs have a decoder
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, from the param spec tree)."""
+        from repro.models.registry import get_model
+        from repro.models.common import ParamSpec
+        import numpy as np
+        import jax
+        specs = get_model(self).param_specs()
+        leaves = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, ParamSpec))
+        return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k experts only)."""
+        if self.n_experts == 0:
+            return self.n_params()
+        total = self.n_params()
+        from repro.models.registry import get_model
+        from repro.models.common import ParamSpec
+        import numpy as np, jax
+        specs = get_model(self).param_specs()
+        flat = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+        inactive = 0
+        for path, s in flat:
+            keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+            if any("experts" == k for k in keys):
+                n = int(np.prod(s.shape))
+                inactive += n - (n * self.top_k) // self.n_experts
+        return total - inactive
+
+
+# ----------------------------------------------------------------------
+# Shape cells (assigned): every LM arch gets these four shapes.
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # 'train' | 'prefill' | 'decode'
+
+
+SHAPE_CELLS = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Whether a shape cell applies to the arch; reason when skipped."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped (see DESIGN.md §4)"
+    return True, ""
+
+
+# ----------------------------------------------------------------------
+# Function-preserving TP padding.
+#
+# Padding head counts / vocab with zero-initialized rows keeps the network
+# function identical while making dims divisible by the model axis. The
+# original dims are recorded so roofline can account for the pad waste.
+# ----------------------------------------------------------------------
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_for_tp(cfg: ModelConfig, tp: int) -> ModelConfig:
+    upd = {}
+    if cfg.orig_n_heads == 0:
+        upd["orig_n_heads"] = cfg.n_heads
+        upd["orig_n_kv_heads"] = cfg.n_kv_heads
+        upd["orig_vocab_size"] = cfg.vocab_size
+    # q heads: always pad to multiple of tp (sharded over 'model')
+    if cfg.family not in ("xlstm",):          # xlstm shards value dim, not heads
+        if cfg.n_heads % tp != 0:
+            upd["n_heads"] = _round_up(cfg.n_heads, tp)
+        # kv heads: shard only when already divisible; if smaller than tp,
+        # replicate instead of padding (cache replication is cheaper than
+        # kv-head inflation for GQA kv<=8 — see DESIGN.md §5).
+        if cfg.n_kv_heads >= tp and cfg.n_kv_heads % tp != 0:
+            upd["n_kv_heads"] = _round_up(cfg.n_kv_heads, tp)
+    if cfg.vocab_size % tp != 0:
+        upd["vocab_size"] = _round_up(cfg.vocab_size, tp)
+    if not upd:
+        return cfg
+    return replace(cfg, **upd)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    upd = dict(
+        n_layers=min(cfg.n_layers, 4 if not cfg.block_pattern else 2 * max(1, len(cfg.block_pattern) // 1)),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        attn_chunk=64,
+    )
+    if cfg.block_pattern:
+        upd["n_layers"] = len(cfg.block_pattern)  # one full pattern group
+        upd["d_rnn"] = 128
+    if cfg.n_experts:
+        upd["n_experts"] = min(cfg.n_experts, 4)
+        upd["top_k"] = min(cfg.top_k, 2)
+        upd["moe_d_ff"] = 64
+        upd["first_dense_layers"] = min(cfg.first_dense_layers, 1)
+        upd["n_shared_experts"] = min(cfg.n_shared_experts, 1)
+    if cfg.family == "mla_moe":
+        upd["kv_lora_rank"] = 64
+        upd["qk_nope_dim"] = 32
+        upd["qk_rope_dim"] = 16
+        upd["v_head_dim"] = 32
+        upd["head_dim"] = 32
+    if cfg.family == "encdec":
+        upd["n_encoder_layers"] = 2
+        upd["n_layers"] = 2
+        upd["encoder_seq"] = 32
+    if cfg.sliding_window:
+        upd["sliding_window"] = 32
+    if cfg.family == "xlstm":
+        upd["n_layers"] = 4
+        upd["slstm_every"] = 4
+        upd["n_heads"] = 2
+        upd["n_kv_heads"] = 2
+        upd["head_dim"] = 0   # derived in model
+        upd["d_ff"] = 0
+    if cfg.mrope_sections:
+        upd["mrope_sections"] = (4, 6, 6)   # sums to half of head_dim 32
+    if cfg.rope_fraction < 1.0:
+        upd["rope_fraction"] = 0.5
+    return replace(cfg, name=cfg.name + "-reduced", **upd)

@@ -1,0 +1,28 @@
+"""Whisper-small backbone [arXiv:2212.04356]. Conv/audio frontend stubbed.
+
+The assignment line says 12L; whisper-small is 12 encoder + 12 decoder layers,
+which is what we build (noted in DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,              # decoder layers
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    norm="ln",
+    act="gelu",
+    qkv_bias=True,
+    mlp_bias=True,
+    attn_out_bias=True,
+    rope_style="none",        # learned absolute positions
+    encoder_seq=1500,
+    frontend="audio",
+    tie_embeddings=True,
+)

@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — Composition of Experts on a three-tier
+memory system with streaming-dataflow fusion."""
+from repro.core.coe import CompositionOfExperts, ExpertHandle, GenerationResult
+from repro.core.router import LMRouter, HashRouter
+from repro.core.switching import HBMWeightCache, SwitchStats, model_switch_time
+from repro.core.memory_tiers import (
+    MemoryTier, MachineTiers, MACHINES, SN40L_NODE, DGX_A100, DGX_H100,
+    TPU_V5E_NODE, Symbol, allocate_static, spill_order, plan_placement,
+)
+from repro.core import bandwidth_model, fusion
+
+__all__ = [
+    "CompositionOfExperts", "ExpertHandle", "GenerationResult",
+    "LMRouter", "HashRouter", "HBMWeightCache", "SwitchStats",
+    "model_switch_time", "MemoryTier", "MachineTiers", "MACHINES",
+    "SN40L_NODE", "DGX_A100", "DGX_H100", "TPU_V5E_NODE",
+    "Symbol", "allocate_static", "spill_order", "plan_placement",
+    "bandwidth_model", "fusion",
+]

@@ -1,0 +1,88 @@
+"""Static bandwidth/latency model (paper §VII 'Managing bandwidth in
+software': a first-order static model of application needs vs hardware).
+
+Used by: the CoE scheduler (switch-vs-execute tradeoffs), the Table V /
+Fig 12 benchmarks (cross-machine latency/footprint projections), and the
+roofline analysis (three-term step-time model).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.memory_tiers import MachineTiers, MACHINES
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class StepCost:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+
+def decode_step_cost(n_active_params: int, kv_bytes_per_token_ctx: int,
+                     batch: int, machine: MachineTiers, tp: int = 8,
+                     dtype_bytes: int = 2,
+                     collective_bytes: float = 0.0,
+                     link_bw: float = 50e9) -> StepCost:
+    """One autoregressive decode step for a whole batch, TP over `tp` sockets.
+
+    memory term: every active weight byte + the KV cache bytes stream from
+    HBM once per step (the paper's >85%-of-HBM-bw fused decode regime).
+    """
+    weight_bytes = n_active_params * dtype_bytes
+    flops = 2.0 * n_active_params * batch
+    mem = (weight_bytes + kv_bytes_per_token_ctx * batch) / tp
+    comp = flops / tp
+    coll = collective_bytes / tp
+    return StepCost(
+        compute_s=comp / machine.peak_flops_bf16,
+        memory_s=mem / (machine.hbm.bandwidth * machine.hbm_efficiency),
+        collective_s=coll / link_bw,
+    )
+
+
+def switch_cost(expert_bytes: int, machine: MachineTiers) -> float:
+    """Capacity tier -> HBM copy time (whole node bandwidth)."""
+    return expert_bytes / machine.copy_bw_node
+
+
+def coe_latency(n_experts_used: int, expert_bytes: int, resident_experts: int,
+                decode_cost: StepCost, n_tokens: int, machine: MachineTiers,
+                router_cost_s: float = 0.0) -> Dict[str, float]:
+    """Fig 12 model: total latency to serve one batch where
+    ``n_experts_used`` distinct experts are needed and ``resident_experts``
+    already sit in HBM (LRU hits)."""
+    misses = max(0, n_experts_used - resident_experts)
+    sw = misses * switch_cost(expert_bytes, machine)
+    ex = n_experts_used * n_tokens * decode_cost.step_s
+    return {"switch_s": sw, "exec_s": ex, "router_s": router_cost_s,
+            "total_s": sw + ex + router_cost_s}
+
+
+def footprint_nodes(n_experts: int, expert_bytes: int, machine: MachineTiers,
+                    use_capacity_tier: bool) -> int:
+    """Fig 13 model: nodes needed to *hold* a CoE at full service latency.
+    With the capacity tier, experts live in DDR/host and stream to HBM; the
+    HBM only needs the working set. Without it (the DGX HBM-only scenario),
+    all experts must fit in aggregate HBM."""
+    total = n_experts * expert_bytes
+    if use_capacity_tier:
+        # capacity tier is per socket (paper Table II: 1.5 TiB DDR / socket)
+        per_node = machine.capacity.capacity * machine.sockets_per_node
+    else:
+        # HBM-only: reserve ~8% for KV cache + activations
+        per_node = machine.hbm.capacity * machine.sockets_per_node * 0.92
+    return max(1, math.ceil(total / per_node))

@@ -1,0 +1,134 @@
+"""Composition of Experts (paper §II, §V): the system-level contribution.
+
+A CoE = one router + N independently-built experts. One inference:
+    (1) run the router on the prompt batch,
+    (2) activate the chosen expert(s): capacity tier -> HBM copy (LRU cache),
+    (3) run the expert: prefill + autoregressive decode.
+
+This module owns the composition, the expert registry (the "dynamic
+linker/loader" of §V-B: each expert declares its memory contract ahead of
+time), per-expert batch grouping (BS=8 semantics of §VI-C), prefetch overlap,
+and the switch/execute latency breakdown of Fig 1.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.switching import HBMWeightCache, tree_bytes
+from repro.models import get_model
+from repro.models.common import param_bytes
+
+
+@dataclass
+class ExpertHandle:
+    """One expert in the composition. Params live on the capacity tier
+    (host memory = the DDR analogue) until activated."""
+    name: str
+    cfg: ModelConfig
+    host_params: Any                  # host-side pytree ("DDR")
+    domain: str = "general"
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(x).nbytes
+                       for x in jax.tree.leaves(self.host_params)))
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray
+    switch_seconds: float
+    exec_seconds: float
+    route_seconds: float
+    expert_of_prompt: np.ndarray
+
+
+class CompositionOfExperts:
+    """The Samba-CoE execution engine on the three-tier memory system."""
+
+    def __init__(self, router, router_params, hbm_capacity_bytes: int,
+                 sharding=None):
+        self.router = router
+        self.router_params = router_params   # router lives in HBM (paper Fig 9)
+        self.experts: Dict[str, ExpertHandle] = {}
+        self._models: Dict[str, Any] = {}
+        self.cache = HBMWeightCache(
+            hbm_capacity_bytes,
+            fetch=lambda name: self.experts[name].host_params,
+            sharding=sharding,
+        )
+
+    # -- registry (the dynamic linker/loader of §V-B) --------------------
+    def register(self, handle: ExpertHandle):
+        if handle.name in self.experts:
+            raise KeyError(f"duplicate expert {handle.name}")
+        self.experts[handle.name] = handle
+        self._models[handle.name] = get_model(handle.cfg)
+
+    def memory_contract(self, name: str) -> Dict[str, int]:
+        """Ahead-of-time footprint declaration (paper: 'each compiled model
+        binary tells us exactly how much HBM and DDR space it requires')."""
+        h = self.experts[name]
+        return {"hbm_bytes": h.nbytes, "ddr_bytes": h.nbytes}
+
+    def expert_names(self) -> List[str]:
+        return list(self.experts.keys())
+
+    # -- inference --------------------------------------------------------
+    def route(self, tokens) -> np.ndarray:
+        idx = self.router.route(self.router_params, tokens)
+        return np.asarray(jax.device_get(idx))
+
+    def generate(self, tokens: np.ndarray, n_tokens: int, *,
+                 prefetch_next: bool = True) -> GenerationResult:
+        """tokens (B,S) int32. Each prompt may route to a different expert;
+        prompts are grouped per expert (paper §VI-C BS>1 semantics) and each
+        (group, expert) pair runs sequentially, with the *next* group's
+        expert prefetched during the current group's decode."""
+        names = self.expert_names()
+        t0 = time.perf_counter()
+        eidx = self.route(tokens) % len(names)
+        route_s = time.perf_counter() - t0
+
+        order = np.argsort(eidx, kind="stable")
+        groups: List[tuple] = []
+        for e in np.unique(eidx[order]):
+            rows = np.where(eidx == e)[0]
+            groups.append((int(e), rows))
+
+        B, S = tokens.shape
+        out = np.zeros((B, n_tokens), np.int32)
+        switch_s = 0.0
+        exec_s = 0.0
+        for gi, (e, rows) in enumerate(groups):
+            name = names[e]
+            t0 = time.perf_counter()
+            params = self.cache.activate(name)
+            switch_s += time.perf_counter() - t0
+
+            if prefetch_next and gi + 1 < len(groups):
+                self.cache.prefetch(names[groups[gi + 1][0]])
+
+            model = self._models[name]
+            sub = jnp.asarray(tokens[rows])
+            t0 = time.perf_counter()
+            last, cache = model.prefill(params, {"tokens": sub},
+                                        max_len=S + n_tokens)
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            toks = [tok]
+            for t in range(n_tokens - 1):
+                lg, cache = model.decode_step(params, cache, tok[:, None],
+                                              jnp.int32(S + t))
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                toks.append(tok)
+            seq = jax.device_get(jnp.stack(toks, axis=1))
+            exec_s += time.perf_counter() - t0
+            out[rows] = seq
+        return GenerationResult(out, switch_s, exec_s, route_s, eidx)

@@ -1,0 +1,170 @@
+"""Expert switching engine: the HBM tier as a software-managed LRU cache of
+expert weights over the host-DRAM capacity tier (paper §V-B CoE runtime).
+
+Mechanics reproduced from the paper:
+  * LRU eviction when HBM capacity is hit;
+  * read-only symbols (weights) skip copy-back to the capacity tier on
+    eviction — only mutable state would be written back;
+  * per-model ahead-of-time size contracts (each compiled expert declares its
+    HBM/DDR footprint before activation);
+  * prefetch: the copy of a predicted next expert is issued asynchronously so
+    it overlaps with the current expert's decode (JAX dispatch is async —
+    the transfer rides the same mechanism the paper's §VII P2P/DDR streams
+    use, without blocking the compute stream).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.memory_tiers import MachineTiers, TPU_V5E_NODE
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+@dataclass
+class SwitchStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_copied_in: int = 0
+    bytes_copied_back: int = 0
+    bytes_copyback_elided: int = 0
+    switch_seconds: float = 0.0
+
+    def as_dict(self):
+        return dataclasses_asdict(self)
+
+
+def dataclasses_asdict(obj):
+    import dataclasses
+    return dataclasses.asdict(obj)
+
+
+@dataclass
+class _Entry:
+    value: Any             # device pytree
+    nbytes: int
+    read_only: bool
+    dirty: bool = False
+
+
+class HBMWeightCache:
+    """LRU cache of expert parameter pytrees in device memory ("HBM"),
+    backed by a host-memory fetch function (the "DDR" capacity tier).
+
+    ``fetch(expert_id) -> host pytree`` is the DDR read; ``device_put`` is
+    the DDR->HBM copy. ``writeback(expert_id, value)`` is only invoked for
+    dirty non-read-only entries (paper's copy-back elision).
+    """
+
+    def __init__(self, capacity_bytes: int,
+                 fetch: Callable[[str], Any],
+                 writeback: Optional[Callable[[str, Any], None]] = None,
+                 device=None,
+                 sharding=None):
+        self.capacity = int(capacity_bytes)
+        self.fetch = fetch
+        self.writeback = writeback
+        self.device = device
+        self.sharding = sharding
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._used = 0
+        self.stats = SwitchStats()
+
+    # -- internals -----------------------------------------------------
+    def _put_device(self, host_tree):
+        if self.sharding is not None:
+            return jax.device_put(host_tree, self.sharding)
+        if self.device is not None:
+            return jax.device_put(host_tree, self.device)
+        return jax.device_put(host_tree)
+
+    def _evict_one(self):
+        name, entry = self._entries.popitem(last=False)     # LRU = oldest
+        self._used -= entry.nbytes
+        self.stats.evictions += 1
+        if entry.dirty and not entry.read_only and self.writeback is not None:
+            host = jax.device_get(entry.value)
+            self.writeback(name, host)
+            self.stats.bytes_copied_back += entry.nbytes
+        else:
+            self.stats.bytes_copyback_elided += entry.nbytes
+        del entry
+
+    def _make_room(self, need: int):
+        if need > self.capacity:
+            raise MemoryError(
+                f"expert of {need} bytes exceeds HBM tier capacity "
+                f"{self.capacity}")
+        while self._used + need > self.capacity:
+            self._evict_one()
+
+    # -- public API ------------------------------------------------------
+    def resident(self, expert_id: str) -> bool:
+        return expert_id in self._entries
+
+    @property
+    def used_bytes(self) -> int:
+        return self._used
+
+    def activate(self, expert_id: str, *, read_only: bool = True):
+        """Return the device pytree for an expert, copying it in on miss.
+        Updates LRU order. Blocks until the copy is complete (decode needs
+        the weights); use ``prefetch`` to overlap."""
+        if expert_id in self._entries:
+            self._entries.move_to_end(expert_id)
+            self.stats.hits += 1
+            return self._entries[expert_id].value
+        self.stats.misses += 1
+        t0 = time.perf_counter()
+        host = self.fetch(expert_id)
+        nbytes = tree_bytes(host)
+        self._make_room(nbytes)
+        dev = self._put_device(host)
+        jax.block_until_ready(dev)
+        self.stats.switch_seconds += time.perf_counter() - t0
+        self.stats.bytes_copied_in += nbytes
+        self._entries[expert_id] = _Entry(dev, nbytes, read_only)
+        self._used += nbytes
+        return dev
+
+    def prefetch(self, expert_id: str, *, read_only: bool = True) -> bool:
+        """Issue an async copy for a predicted-next expert; returns True if a
+        copy was started. Does NOT block — the transfer overlaps with
+        whatever compute is in flight (paper Fig 9 step overlap)."""
+        if expert_id in self._entries:
+            return False
+        host = self.fetch(expert_id)
+        nbytes = tree_bytes(host)
+        self._make_room(nbytes)
+        dev = self._put_device(host)      # async dispatch, no block
+        self.stats.bytes_copied_in += nbytes
+        self._entries[expert_id] = _Entry(dev, nbytes, read_only)
+        self._entries.move_to_end(expert_id, last=False)  # prefetch ≠ recency
+        self._used += nbytes
+        return True
+
+    def mark_dirty(self, expert_id: str):
+        self._entries[expert_id].dirty = True
+
+    def drop(self, expert_id: str):
+        if expert_id in self._entries:
+            e = self._entries.pop(expert_id)
+            self._used -= e.nbytes
+
+    def expert_ids(self):
+        return list(self._entries.keys())
+
+
+def model_switch_time(nbytes: int, machine: MachineTiers = TPU_V5E_NODE) -> float:
+    """Analytic switch latency: capacity-tier -> HBM copy at node bandwidth
+    (paper Fig 1 / Fig 12: the DDR->HBM copy term)."""
+    return nbytes / machine.copy_bw_node

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, MemmapTokens, make_source, iterate
+
+__all__ = ["DataConfig", "SyntheticLM", "MemmapTokens", "make_source", "iterate"]

@@ -1,0 +1,10 @@
+"""Distributed layer. Submodules are imported directly to avoid import
+cycles with repro.models (which uses repro.distributed.ctx):
+
+    from repro.distributed import ctx            # safe everywhere
+    from repro.distributed import partitioning   # needs repro.models.common
+    from repro.distributed import stepfn         # needs repro.models
+"""
+from repro.distributed import ctx
+
+__all__ = ["ctx"]

@@ -1,0 +1,202 @@
+"""Logical-axis partitioning: maps ParamSpec logical axes onto mesh axes.
+
+Mesh contract (launch/mesh.py):
+    single-pod: (16, 16)  ('data', 'model')
+    multi-pod : (2, 16, 16) ('pod', 'data', 'model')
+
+Sharding rules (see DESIGN.md §5):
+  * batch-like axes shard over ('pod','data');
+  * TP axes ('q_heads', 'ffn', 'vocab', 'rnn', 'mlstm_v', 'mlstm_vh',
+    'expert_ffn') shard over 'model';
+  * 'experts' shards over 'model' (EP) when divisible — then 'expert_ffn'
+    stays replicated inside each expert;
+  * 'kv_heads' shards over 'model' only when divisible (GQA kv<16 replicates
+    the small KV projections instead of inflating the cache);
+  * anything unlisted is replicated.
+
+A dim is sharded only when its size divides the mesh-axis size — the configs
+are pre-padded by ``pad_for_tp`` so the hot dims always divide.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+# logical axis -> mesh axis (None = replicate). Order matters for tensors
+# carrying two shardable axes: earlier-listed axes win the mesh axis.
+TP_AXES = ("experts", "q_heads", "kv_heads", "ffn", "expert_ffn", "vocab",
+           "rnn", "mlstm_v", "mlstm_vh", "kv_seq")
+BATCH_AXES = ("batch",)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _mesh_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def leaf_pspec(s: ParamSpec, mesh: Mesh) -> P:
+    """PartitionSpec for one ParamSpec leaf."""
+    model_used = False
+    entries = []
+    # EP decision for this leaf: if an 'experts' dim is present and divisible,
+    # it takes the model axis and 'expert_ffn' replicates.
+    axes = s.axes
+    has_ep = False
+    for dim, ax in zip(s.shape, axes):
+        if ax == "experts" and "model" in mesh.axis_names and \
+                dim % _mesh_size(mesh, "model") == 0:
+            has_ep = True
+    for dim, ax in zip(s.shape, axes):
+        if ax in BATCH_AXES:
+            da = data_axes(mesh)
+            total = int(np.prod([_mesh_size(mesh, a) for a in da])) if da else 1
+            entries.append(da if da and dim % total == 0 else None)
+            continue
+        if ax in TP_AXES and "model" in mesh.axis_names and not model_used:
+            if has_ep and ax == "expert_ffn":
+                entries.append(None)
+                continue
+            msize = _mesh_size(mesh, "model")
+            if dim % msize == 0 and dim >= msize:
+                entries.append("model")
+                model_used = True
+                continue
+        entries.append(None)
+    return P(*entries)
+
+
+def param_shardings(specs, mesh: Mesh):
+    """NamedSharding tree matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, leaf_pspec(s, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_pspecs(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: leaf_pspec(s, mesh),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ----------------------------------------------------------------------
+# Cache shardings (per family)
+# ----------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    dp = data_axes(mesh)
+    dpp = dp if dp else None
+    m = "model" if "model" in mesh.axis_names else None
+    msize = _mesh_size(mesh, "model") if m else 1
+
+    from repro.distributed import ctx
+    seq_shard = ctx.perf().cache_seq_shard
+
+    if cfg.family in ("dense", "moe"):
+        kv = m if (m and cfg.n_kv_heads % msize == 0) else None
+        if kv is None and seq_shard and m:
+            sp = P(None, dpp, m, None, None)     # context-parallel cache
+        else:
+            sp = P(None, dpp, None, kv, None)
+        return {"k": sp, "v": sp}
+    if cfg.family == "mla_moe":
+        sp = (P(None, dpp, m, None) if (seq_shard and m)
+              else P(None, dpp, None, None))
+        out = {"ckv": sp, "krope": sp}
+        if cfg.first_dense_layers:
+            out["ckv0"] = sp
+            out["krope0"] = sp
+        return out
+    if cfg.family == "encdec":
+        kv = m if (m and cfg.n_kv_heads % msize == 0) else None
+        sp = P(None, dpp, None, kv, None)
+        return {"k": sp, "v": sp, "cross_k": sp, "cross_v": sp}
+    if cfg.family == "rglru":
+        rnn = m if (m and cfg.d_rnn % msize == 0) else None
+        out = {
+            "rec": {"h": P(None, None, dpp, rnn),
+                    "conv": P(None, None, dpp, None, rnn)},
+            "k": P(None, dpp, None, None, None),
+            "v": P(None, dpp, None, None, None),
+        }
+        from repro.models.rglru import _group_counts
+        if _group_counts(cfg)[1]:
+            out["tail"] = {"h": P(None, dpp, rnn),
+                           "conv": P(None, dpp, None, rnn)}
+        return out
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import _dims
+        D, Di, H, dh, _ = _dims(cfg)
+        v = m if (m and dh % msize == 0) else None
+        vi = m if (m and Di % msize == 0) else None
+        return {
+            "mlstm": {"C": P(None, None, dpp, None, None, v),
+                      "n": P(None, None, dpp, None, None),
+                      "conv": P(None, None, dpp, None, vi)},
+            "slstm": {k: P(None, dpp, None) for k in ("h", "c", "n", "m")},
+        }
+    raise KeyError(cfg.family)
+
+
+def cache_layer_pspecs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    """Per-layer cache-slice pspecs (leading layer/group dim stripped) for
+    the in-scan sharding constraints (ctx.named_shardings)."""
+    cp = cache_pspecs(cfg, mesh)
+    out: Dict[str, P] = {}
+    if cfg.family in ("dense", "moe", "encdec", "rglru"):
+        out["cache_kv"] = P(*cp["k"][1:])
+    if cfg.family == "mla_moe":
+        out["cache_mla"] = P(*cp["ckv"][1:])
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any], mesh: Mesh):
+    dp = data_axes(mesh)
+    dpp = dp if dp else None
+    out = {}
+    for k, v in batch.items():
+        nd = len(v.shape)
+        out[k] = P(dpp, *([None] * (nd - 1)))
+    return out
+
+
+def shardings_from_pspecs(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def fit_pspec(shape, pspec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims that don't divide the mesh axes evenly (e.g.
+    batch=1 in the long_500k cell)."""
+    entries = []
+    for i, entry in enumerate(pspec):
+        if entry is None or i >= len(shape):
+            entries.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        entries.append(entry if shape[i] % total == 0 and shape[i] >= total
+                       else None)
+    # preserve rank
+    while len(entries) < len(shape):
+        entries.append(None)
+    return P(*entries[: len(shape)])
+
+
+def fit_pspec_tree(sds_tree, pspec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, p: fit_pspec(s.shape, p, mesh), sds_tree, pspec_tree,
+        is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))

@@ -1,0 +1,240 @@
+"""Distributed step functions: jit-compiled train / prefill / decode steps
+with explicit in/out shardings for any (arch x mesh).
+
+These are exactly what the multi-pod dry-run lowers and what train.py /
+serve.py execute. One code path — no dry-run-only forks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import partitioning as part
+from repro.models import get_model
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+# ----------------------------------------------------------------------
+# loss
+# ----------------------------------------------------------------------
+
+def softmax_xent(logits, targets):
+    """Mean token cross-entropy; fp32 logsumexp."""
+    from repro.distributed import ctx
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    if ctx.perf().onehot_xent:
+        # iota-compare select: elementwise on the vocab-sharded logits, the
+        # reduction psums partials — no all-gather of the logits
+        V = lf.shape[-1]
+        hit = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1) ==             targets[..., None]
+        gold = jnp.sum(jnp.where(hit, lf, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_xent(cfg, model, params, h_fn, batch, n_chunks=8):
+    """Cross-entropy without materializing the full (B,S,V) logits:
+    the final hidden states are unembedded and reduced per sequence chunk
+    (python loop — exact costs, bounded peak memory)."""
+    from repro.models import transformer as T
+    h = h_fn()
+    B, S, D = h.shape
+    c = S // n_chunks
+    total = 0.0
+    for i in range(n_chunks):
+        hs = h[:, i * c:(i + 1) * c]
+        ts = batch["targets"][:, i * c:(i + 1) * c]
+        logits = T.unembed(cfg, params, hs)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, ts[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(lse - gold)
+    return total / (B * S)
+
+
+# ----------------------------------------------------------------------
+# train step
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    opt_cfg: Optional[AdamWConfig] = None, *,
+                    remat: bool = True, jit: bool = True,
+                    accum_steps: int = 1):
+    """Returns (step_fn, state_shardings, batch_sharding_fn).
+
+    state = {'params': ..., 'opt': {'mu','nu','step'}}
+    batch = {'tokens': (B,S), 'targets': (B,S)[, 'enc_embeds': ...]}
+
+    accum_steps > 1: the global batch splits into microbatches along dim 0
+    with f32 gradient accumulation before one optimizer step — the standard
+    lever when the per-step activation footprint exceeds HBM.
+    """
+    model = get_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    specs = model.param_specs()
+    pspecs = part.param_pspecs(specs, mesh)
+    state_pspecs = {
+        "params": pspecs,
+        "opt": {"mu": pspecs, "nu": pspecs, "step": P()},
+    }
+    state_shardings = jax.tree.map(
+        lambda p: NamedSharding(mesh, p), state_pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch, remat=remat)
+        return softmax_xent(logits, batch["targets"])
+
+    def step_fn(state, batch):
+        if accum_steps <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                loss_acc, gacc = carry
+                l, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_acc + l, gacc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, zeros), micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    def batch_shardings(batch_tree):
+        bp = part.batch_pspecs(cfg, batch_tree, mesh)
+        return jax.tree.map(lambda p: NamedSharding(mesh, p), bp,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if not jit:
+        return step_fn, state_shardings, batch_shardings
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(state_shardings, None),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+    )
+    return fn, state_shardings, batch_shardings
+
+
+def abstract_train_state(cfg: ModelConfig, mesh: Mesh):
+    """ShapeDtypeStructs (with shardings) for the train state — dry-run input."""
+    model = get_model(cfg)
+    specs = model.param_specs()
+    pspecs = part.param_pspecs(specs, mesh)
+
+    def sds(s, p):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, p))
+
+    from repro.models.common import ParamSpec
+    params = jax.tree.map(sds, specs, pspecs,
+                          is_leaf=lambda x: isinstance(x, ParamSpec))
+    f32 = lambda s, p: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                            sharding=NamedSharding(mesh, p))
+    mu = jax.tree.map(f32, specs, pspecs,
+                      is_leaf=lambda x: isinstance(x, ParamSpec))
+    nu = jax.tree.map(f32, specs, pspecs,
+                      is_leaf=lambda x: isinstance(x, ParamSpec))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return {"params": params, "opt": {"mu": mu, "nu": nu, "step": step}}
+
+
+# ----------------------------------------------------------------------
+# serving steps
+# ----------------------------------------------------------------------
+
+def _fitted_cache_pspecs(cfg, mesh, batch, max_len):
+    model = get_model(cfg)
+    cs = model.cache_spec(batch, max_len)
+    cp = part.cache_pspecs(cfg, mesh)
+    return part.fit_pspec_tree(cs, cp, mesh)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, max_len: int, *,
+                      batch: int = 0, jit: bool = True):
+    model = get_model(cfg)
+    specs = model.param_specs()
+    pspecs = part.param_pspecs(specs, mesh)
+    param_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    cpsp = _fitted_cache_pspecs(cfg, mesh, batch or 8, max_len)
+    cache_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), cpsp,
+                            is_leaf=lambda x: isinstance(x, P))
+    dp = part.data_axes(mesh)
+    logits_sh = NamedSharding(
+        mesh, part.fit_pspec((batch or 8, cfg.vocab_size),
+                             P(dp if dp else None, None), mesh))
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    if not jit:
+        return prefill_fn, param_sh, cache_sh
+    fn = jax.jit(prefill_fn, in_shardings=(param_sh, None),
+                 out_shardings=(logits_sh, cache_sh))
+    return fn, param_sh, cache_sh
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch: int = 0,
+                     max_len: int = 0, jit: bool = True):
+    model = get_model(cfg)
+    specs = model.param_specs()
+    pspecs = part.param_pspecs(specs, mesh)
+    param_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    cpsp = _fitted_cache_pspecs(cfg, mesh, batch or 8, max_len or 1024)
+    cache_sh = jax.tree.map(lambda p: NamedSharding(mesh, p), cpsp,
+                            is_leaf=lambda x: isinstance(x, P))
+    dp = part.data_axes(mesh)
+    logits_sh = NamedSharding(
+        mesh, part.fit_pspec((batch or 8, cfg.vocab_size),
+                             P(dp if dp else None, None), mesh))
+
+    # per-layer in-scan constraints: strip the leading layer/group dim of
+    # the fitted cache pspecs
+    layer_ps = {}
+    if cfg.family in ("dense", "moe", "encdec", "rglru"):
+        layer_ps["cache_kv"] = P(*cpsp["k"][1:])
+    if cfg.family == "mla_moe":
+        layer_ps["cache_mla"] = P(*cpsp["ckv"][1:])
+
+    def decode_fn(params, cache, tokens, pos):
+        from repro.distributed import ctx
+        with ctx.named_shardings(**layer_ps):
+            return model.decode_step(params, cache, tokens, pos)
+
+    if not jit:
+        return decode_fn, param_sh, cache_sh
+    fn = jax.jit(decode_fn,
+                 in_shardings=(param_sh, cache_sh, None, None),
+                 out_shardings=(logits_sh, cache_sh),
+                 donate_argnums=(1,))
+    return fn, param_sh, cache_sh
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    model = get_model(cfg)
+    cs = model.cache_spec(batch, max_len)
+    cp = _fitted_cache_pspecs(cfg, mesh, batch, max_len)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        cs, cp, is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute paths.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper, auto-interpret on CPU), and ref.py (pure-jnp oracle).
+
+  flash_attention — prefill flash attention (causal/SWA block skipping) and
+                    flash-decode (cache streaming at HBM bandwidth).
+  fused_decode    — norm+QKV+RoPE and norm+SwiGLU+residual decode kernels;
+                    ops.decoder_layer_step composes the paper's fused
+                    decoder-layer decode claim on TPU.
+  monarch_fft     — the paper's Fig-3 fusion showcase (FlashFFTConv):
+                    Gemm0 -> Mul -> Transpose -> Gemm1 in one kernel, plus
+                    the fully-fused FFT-conv variant.
+  lru_scan        — RG-LRU linear recurrence (recurrentgemma's hot loop):
+                    state lives in VMEM scratch across time blocks,
+                    coefficients stream from HBM exactly once.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import attention, decode
+from repro.kernels.flash_attention import ref
+
+__all__ = ["attention", "decode", "ref"]

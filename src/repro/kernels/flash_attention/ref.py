@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: quadratic masked softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import naive_attention
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q (B,S,Hq,dh), k/v (B,S,Hkv,dh) -> (B,S,Hq,dh)."""
+    return naive_attention(q, k, v, causal=causal, window=window)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q (B,Hq,dh), caches (B,S,Hkv,dh), length scalar -> (B,Hq,dh)."""
+    valid = jnp.arange(k_cache.shape[1])[None, :] < length
+    out = naive_attention(q[:, None], k_cache, v_cache, causal=False)
+    # recompute with explicit mask (naive_attention lacks a length arg)
+    import math
+    B, S, Hkv, dh = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(dh)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    import jax
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, Hq, dh).astype(q.dtype)

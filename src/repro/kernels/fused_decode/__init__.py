@@ -1,0 +1,5 @@
+from repro.kernels.fused_decode.ops import decoder_layer_step
+from repro.kernels.fused_decode.kernel import qkv_rope, ffn_swiglu
+from repro.kernels.fused_decode import ref
+
+__all__ = ["decoder_layer_step", "qkv_rope", "ffn_swiglu", "ref"]

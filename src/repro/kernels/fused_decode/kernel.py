@@ -1,0 +1,135 @@
+"""Fused decode-step Pallas kernels: the paper's headline dataflow claim.
+
+SN40L fuses an *entire decoder layer* into one kernel for autoregressive
+decode (paper §VI-B: >85% HBM bandwidth, near-zero launch overhead). On TPU
+the equivalent is a minimal-HBM-traffic schedule: every weight byte is read
+exactly once per token, and all intermediate activations stay in VMEM.
+
+Kernels:
+  * ``qkv_rope``:  RMSNorm + QKV projection + RoPE in one pass. Grid streams
+    one head-column block of the fused [Wq|Wk|Wv] matrix per step; the
+    normalized activation vector lives in VMEM, rotary phases are computed
+    in-kernel from the position scalar. V-heads skip rotation by flag.
+  * ``ffn_swiglu``: RMSNorm + SwiGLU MLP + residual for decode. Grid streams
+    (gate, up, down) column/row blocks; the f32 output accumulator persists
+    in VMEM scratch across the sequential grid axis — one pass over all FFN
+    weights, the theoretical HBM minimum.
+
+The attention itself is ``kernels/flash_attention.flash_decode`` (cache
+streaming at HBM bandwidth). The output projection is left to XLA: its cost
+is one read of Wo — already optimal, fusion buys nothing there.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# norm + qkv + rope
+# ----------------------------------------------------------------------
+
+def _qkv_kernel(pos_ref, x_ref, scale_ref, w_ref, o_ref, *, dh, n_q, n_kv,
+                theta, rope_frac):
+    h = pl.program_id(0)
+    xn = _rms(x_ref[...], scale_ref[...])                  # (B, D) f32
+    y = jnp.dot(xn, w_ref[:, 0, :].astype(jnp.float32))    # (B, dh)
+
+    rot = int(dh * rope_frac) - int(dh * rope_frac) % 2
+    pos = pos_ref[0].astype(jnp.float32)
+    di = jax.lax.iota(jnp.float32, rot // 2)
+    inv = jnp.exp(-jnp.log(theta) * (2.0 * di / rot))
+    ang = pos * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    y1, y2, yp = y[:, : rot // 2], y[:, rot // 2: rot], y[:, rot:]
+    yr = jnp.concatenate([y1 * cos - y2 * sin, y2 * cos + y1 * sin, yp], axis=-1)
+    is_v = h >= (n_q + n_kv)
+    o_ref[0] = jnp.where(is_v, y, yr).astype(o_ref.dtype)
+
+
+def qkv_rope(x, norm_scale, w_qkv, pos, *, n_q, n_kv, dh, theta=10000.0,
+             rope_frac=1.0, interpret=False):
+    """x (B,D); w_qkv (D, (n_q+2*n_kv)*dh), column-blocked one head per step.
+
+    Returns (H_total, B, dh) with RoPE applied to q and k heads (v skipped).
+    """
+    B, D = x.shape
+    H = n_q + 2 * n_kv
+    assert w_qkv.shape == (D, H * dh)
+    kernel = functools.partial(_qkv_kernel, dh=dh, n_q=n_q, n_kv=n_kv,
+                               theta=theta, rope_frac=rope_frac)
+    return pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((B, D), lambda h: (0, 0)),
+            pl.BlockSpec((D,), lambda h: (0,)),
+            pl.BlockSpec((D, 1, dh), lambda h: (0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, dh), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, B, dh), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), x, norm_scale,
+      w_qkv.reshape(D, H, dh))
+
+
+# ----------------------------------------------------------------------
+# norm + SwiGLU FFN + residual
+# ----------------------------------------------------------------------
+
+def _ffn_kernel(x_ref, scale_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref,
+                *, nf):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xn = _rms(x_ref[...], scale_ref[...])                   # (B, D) f32
+    g = jnp.dot(xn, wg_ref[...].astype(jnp.float32))        # (B, bf)
+    u = jnp.dot(xn, wu_ref[...].astype(jnp.float32))
+    hidden = g * jax.nn.sigmoid(g) * u                      # silu(g)*u
+    acc_ref[...] += jnp.dot(hidden, wo_ref[...].astype(jnp.float32))
+
+    @pl.when(j == nf - 1)
+    def _done():
+        o_ref[...] = (x_ref[...].astype(jnp.float32) + acc_ref[...]).astype(
+            o_ref.dtype)
+
+
+def ffn_swiglu(x, norm_scale, w_gate, w_up, w_down, *, block_f=512,
+               interpret=False):
+    """x (B,D) -> x + SwiGLU(RMSNorm(x)); single pass over FFN weights."""
+    B, D = x.shape
+    F = w_gate.shape[1]
+    bf = min(block_f, F)
+    assert F % bf == 0
+    nf = F // bf
+    kernel = functools.partial(_ffn_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda j: (0, 0)),
+            pl.BlockSpec((D,), lambda j: (0,)),
+            pl.BlockSpec((D, bf), lambda j: (0, j)),
+            pl.BlockSpec((D, bf), lambda j: (0, j)),
+            pl.BlockSpec((bf, D), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, D), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((B, D), jnp.float32)],
+        interpret=interpret,
+    )(x, norm_scale, w_gate, w_up, w_down)

@@ -1,0 +1,48 @@
+"""Jit'd wrapper: one fused decoder-layer decode step built from the Pallas
+kernels (qkv_rope -> cache append -> flash_decode -> out-proj -> ffn_swiglu).
+
+This is the TPU realization of the paper's "entire decoder layer in one
+kernel call": weight bytes are each read once; activations never round-trip
+to HBM between fused ops (see kernel.py header for the adaptation argument).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_decode.kernel import qkv_rope, ffn_swiglu
+from repro.kernels.flash_attention.ops import decode as flash_decode_op
+
+
+def _interp(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("n_q", "n_kv", "dh", "theta", "interpret"),
+         donate_argnums=(2, 3))
+def decoder_layer_step(x, p, k_cache, v_cache, pos, *, n_q, n_kv, dh,
+                       theta=10000.0, interpret=None):
+    """x (B,D), p dict of layer params, caches (B,S,n_kv,dh), pos scalar.
+
+    Returns (y (B,D), k_cache, v_cache).
+    """
+    it = _interp(interpret)
+    B, D = x.shape
+    qkv = qkv_rope(x, p["attn_norm"], p["w_qkv"], pos, n_q=n_q, n_kv=n_kv,
+                   dh=dh, theta=theta, interpret=it)       # (H,B,dh)
+    q = qkv[:n_q].transpose(1, 0, 2)
+    k = qkv[n_q:n_q + n_kv].transpose(1, 0, 2)
+    v = qkv[n_q + n_kv:].transpose(1, 0, 2)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k[:, None], pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v[:, None], pos, 1)
+    o = flash_decode_op(q, k_cache, v_cache, pos + 1, interpret=it)
+    y = x + (o.reshape(B, n_q * dh) @ p["w_o"]).astype(x.dtype)
+    y = ffn_swiglu(y, p["mlp_norm"], p["w_gate"], p["w_up"], p["w_down"],
+                   interpret=it)
+    return y, k_cache, v_cache

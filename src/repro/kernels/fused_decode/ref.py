@@ -1,0 +1,67 @@
+"""Pure-jnp oracle: one dense decoder-layer decode step (llama-style)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+
+
+def rope_ref(y, pos, theta, rope_frac=1.0):
+    """y (..., dh), pos scalar."""
+    dh = y.shape[-1]
+    rot = int(dh * rope_frac) - int(dh * rope_frac) % 2
+    yr, yp = y[..., :rot], y[..., rot:]
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2) / rot))
+    ang = pos.astype(jnp.float32) * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    y1, y2 = yr[..., : rot // 2], yr[..., rot // 2:]
+    out = jnp.concatenate([y1 * cos - y2 * sin, y2 * cos + y1 * sin], axis=-1)
+    return jnp.concatenate([out, yp], axis=-1) if yp.shape[-1] else out
+
+
+def qkv_rope_ref(x, norm_scale, w_qkv, pos, *, n_q, n_kv, dh, theta=10000.0,
+                 rope_frac=1.0):
+    B, D = x.shape
+    H = n_q + 2 * n_kv
+    xn = rms_ref(x, norm_scale)
+    y = (xn @ w_qkv.astype(jnp.float32)).reshape(B, H, dh)
+    rot = rope_ref(y, pos, theta, rope_frac)
+    is_v = jnp.arange(H) >= (n_q + n_kv)
+    out = jnp.where(is_v[None, :, None], y, rot)
+    return out.transpose(1, 0, 2).astype(x.dtype)         # (H, B, dh)
+
+
+def ffn_swiglu_ref(x, norm_scale, w_gate, w_up, w_down):
+    xn = rms_ref(x, norm_scale)
+    g = xn @ w_gate.astype(jnp.float32)
+    u = xn @ w_up.astype(jnp.float32)
+    h = jax.nn.silu(g) * u
+    return (x.astype(jnp.float32) + h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def decoder_layer_step_ref(x, p, k_cache, v_cache, pos, *, n_q, n_kv, dh,
+                           theta=10000.0):
+    """Full decode step for one layer. x (B,D). Returns (y, k_cache, v_cache)."""
+    B, D = x.shape
+    qkv = qkv_rope_ref(x, p["attn_norm"], p["w_qkv"], pos,
+                       n_q=n_q, n_kv=n_kv, dh=dh, theta=theta)
+    q = qkv[:n_q].transpose(1, 0, 2)                       # (B,n_q,dh)
+    k = qkv[n_q:n_q + n_kv].transpose(1, 0, 2)
+    v = qkv[n_q + n_kv:].transpose(1, 0, 2)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k[:, None], pos, 1)[0] \
+        if False else jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k[:, None, :, :].reshape(B, 1, n_kv, dh), pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v[:, None, :, :].reshape(B, 1, n_kv, dh), pos, 1)
+    from repro.kernels.flash_attention.ref import decode_attention_ref
+    o = decode_attention_ref(q, k_cache, v_cache, pos + 1)  # (B,n_q,dh)
+    y = x + (o.reshape(B, n_q * dh) @ p["w_o"]).astype(x.dtype)
+    y = ffn_swiglu_ref(y, p["mlp_norm"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, k_cache, v_cache

@@ -1,0 +1,4 @@
+from repro.kernels.lru_scan.ops import lru_scan
+from repro.kernels.lru_scan import ref
+
+__all__ = ["lru_scan", "ref"]

@@ -1,0 +1,61 @@
+"""RG-LRU linear-recurrence Pallas kernel (recurrentgemma's hot loop).
+
+Streaming-dataflow design (paper §III-A applied to a recurrence):
+  * grid (B, D/blk_d, S/blk_s) — the time axis is the LAST (sequential on
+    TPU) grid dimension, so the running state h lives in VMEM scratch
+    across time blocks: the recurrence never round-trips to HBM.
+  * each step streams one (blk_s, blk_d) tile of the a/b coefficient
+    tensors from HBM exactly once — the kernel is memory-bound at the
+    theoretical minimum traffic (read a,b once; write h once).
+  * within a tile the recurrence runs as blk_s VPU-width elementwise fmas
+    over the (blk_d,) state vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lru_kernel(a_ref, b_ref, o_ref, h_ref, *, blk_s):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)         # (blk_s, blk_d)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, blk_s, body, h_ref[...])
+
+
+def lru_scan(a, b, *, block_s: int = 256, block_d: int = 256,
+             interpret: bool = False):
+    """a, b (B, S, D) -> h (B, S, D) with h_t = a_t h_{t-1} + b_t, h_{-1}=0."""
+    B, S, D = a.shape
+    bs = min(block_s, S)
+    bd = min(block_d, D)
+    assert S % bs == 0 and D % bd == 0
+    grid = (B, D // bd, S // bs)
+    kernel = functools.partial(_lru_kernel, blk_s=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b_, d, s: (b_, s, d)),
+            pl.BlockSpec((1, bs, bd), lambda b_, d, s: (b_, s, d)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda b_, d, s: (b_, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

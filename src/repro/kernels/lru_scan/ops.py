@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the RG-LRU recurrence kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.lru_scan.kernel import lru_scan as _lru_scan
+
+
+def _interp(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("block_s", "block_d", "interpret"))
+def lru_scan(a, b, *, block_s=256, block_d=256, interpret=None):
+    return _lru_scan(a, b, block_s=block_s, block_d=block_d,
+                     interpret=_interp(interpret))

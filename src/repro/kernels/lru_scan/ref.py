@@ -1,0 +1,12 @@
+"""Oracle for the RG-LRU linear recurrence: h_t = a_t * h_{t-1} + b_t."""
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a, b, h0=None):
+    """a, b (B, S, D) -> h (B, S, D); optional initial state h0 (B, D)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    return jax.lax.associative_scan(
+        lambda c1, c2: (c1[0] * c2[0], c2[0] * c1[1] + c2[1]), (a, b),
+        axis=1)[1]

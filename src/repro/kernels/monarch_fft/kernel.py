@@ -1,0 +1,95 @@
+"""Fused Monarch-FFT Pallas kernel (paper Fig. 3/4, Table I).
+
+Pipeline fused into ONE kernel: Gemm0 -> Mul(twiddle) -> Transpose -> Gemm1.
+
+TPU adaptation of the SN40L spatial fusion:
+  * The transpose is fused "as an access pattern" (paper §IV-B): the second
+    GEMM contracts over the first GEMM's output rows via ``dot_general``
+    dimension numbers — A^T is never materialized (the PMU diagonal-stripe
+    trick maps to MXU-native contraction-axis choice).
+  * Grid = (B, N1/blk): each step streams a row-block of W0/tw from HBM into
+    VMEM, computes A_blk = (W0[blk] @ x) * tw[blk], and immediately consumes
+    it: Z[:, blk] = W1 @ A_blk^T. Stage buffers (paper's PMU buffers) are the
+    VMEM blocks; the MXU sees (blk x N1)@(N1 x N2) and (N2 x N2)@(N2 x blk).
+  * Block sizes are multiples of 128 to keep MXU tiles aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _monarch_kernel(x_ref, w0_ref, tw_ref, w1_ref, o_ref):
+    # squeeze the leading batch-block dim of x/o
+    a = jnp.dot(w0_ref[...], x_ref[0],
+                preferred_element_type=jnp.float32)
+    a = a * tw_ref[...].astype(jnp.float32)
+    z = jax.lax.dot_general(
+        w1_ref[...].astype(jnp.float32), a,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0] = z.astype(o_ref.dtype)
+
+
+def monarch_fused(x, w0, tw, w1, *, block_n1: int = 128,
+                       interpret: bool = False):
+    B, N1, N2 = x.shape
+    blk = min(block_n1, N1)
+    assert N1 % blk == 0
+    return pl.pallas_call(
+        _monarch_kernel,
+        grid=(B, N1 // blk),
+        in_specs=[
+            pl.BlockSpec((1, N1, N2), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((blk, N1), lambda b, i: (i, 0)),
+            pl.BlockSpec((blk, N2), lambda b, i: (i, 0)),
+            pl.BlockSpec((N2, N2), lambda b, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N2, blk), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N2, N1), x.dtype),
+        interpret=interpret,
+    )(x, w0, tw, w1)
+
+
+def _monarch_conv_kernel(x_ref, w0_ref, tw_ref, w1_ref, f_ref,
+                         w0i_ref, twi_ref, w1i_ref, o_ref):
+    """Whole FFT-conv for one batch row in VMEM: the paper's 'entire
+    FlashFFTConv in a single kernel call' (13x claim)."""
+    x = x_ref[0]
+    a = jnp.dot(w0_ref[...], x, preferred_element_type=jnp.float32)
+    a = a * tw_ref[...].astype(jnp.float32)
+    f = jax.lax.dot_general(w1_ref[...].astype(jnp.float32), a,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (N2, N1)
+    f = f * f_ref[...].astype(jnp.float32)                        # filter
+    b = jnp.dot(w0i_ref[...].astype(jnp.float32), f,
+                preferred_element_type=jnp.float32)
+    b = b * twi_ref[...].astype(jnp.float32)
+    z = jax.lax.dot_general(w1i_ref[...].astype(jnp.float32), b,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (N1, N2)
+    o_ref[0] = z.astype(o_ref.dtype)
+
+
+def monarch_conv_fused(x, w0, tw, w1, filt, w0i, twi, w1i, *,
+                       interpret: bool = False):
+    """Fused FFT-conv: monarch -> pointwise filter -> inverse monarch.
+    x (B, N1, N2) -> (B, N1, N2). One kernel call for the whole pipeline."""
+    B, N1, N2 = x.shape
+    full = lambda *shape: pl.BlockSpec(shape, lambda b: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        _monarch_conv_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, N1, N2), lambda b: (b, 0, 0)),
+            full(N1, N1), full(N1, N2), full(N2, N2),
+            full(N2, N1),
+            full(N2, N2), full(N2, N1), full(N1, N1),
+        ],
+        out_specs=pl.BlockSpec((1, N1, N2), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N1, N2), x.dtype),
+        interpret=interpret,
+    )(x, w0, tw, w1, filt, w0i, twi, w1i)

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers for the Monarch-FFT kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they lower
+through Mosaic. ``interpret=None`` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.monarch_fft.kernel import monarch_fused, monarch_conv_fused
+from repro.kernels.monarch_fft import ref
+
+
+def _interp(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("block_n1", "interpret"))
+def monarch(x, w0, tw, w1, *, block_n1: int = 128, interpret=None):
+    return monarch_fused(x, w0, tw, w1, block_n1=block_n1,
+                         interpret=_interp(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def monarch_conv(x, w0, tw, w1, filt, w0i, twi, w1i, *, interpret=None):
+    return monarch_conv_fused(x, w0, tw, w1, filt, w0i, twi, w1i,
+                              interpret=_interp(interpret))
+
+
+# analytic roofline terms for the paper's Table I (operational intensity)
+def operational_intensity(B, N1, N2, dtype_bytes=2, fusion="full"):
+    """FLOPs/byte for the Fig-3 pipeline at a given fusion level.
+
+    fusion levels match Table I rows: 'none' (every op materializes to HBM),
+    'gemm0_mul_t' (first three ops fused), 'full' (everything fused).
+    """
+    flops = 2 * B * N1 * N1 * N2 + B * N1 * N2 + 2 * B * N2 * N2 * N1
+    x_b = B * N1 * N2 * dtype_bytes
+    w_b = (N1 * N1 + N1 * N2 + N2 * N2) * dtype_bytes
+    out_b = B * N2 * N1 * dtype_bytes
+    inter = B * N1 * N2 * dtype_bytes       # one intermediate tensor
+    if fusion == "none":
+        # gemm0: x+w0 in, a out; mul: a+tw in, a out; transpose: a in/out;
+        # gemm1: a+w1 in, z out
+        bytes_ = (x_b + N1 * N1 * dtype_bytes + inter) + \
+                 (inter + N1 * N2 * dtype_bytes + inter) + \
+                 (2 * inter) + (inter + N2 * N2 * dtype_bytes + out_b)
+    elif fusion == "gemm0_mul_t":
+        bytes_ = (x_b + (N1 * N1 + N1 * N2) * dtype_bytes + inter) + \
+                 (inter + N2 * N2 * dtype_bytes + out_b)
+    else:
+        bytes_ = x_b + w_b + out_b
+    return flops / bytes_

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Monarch-FFT pipeline (paper Fig. 3).
+
+The simplified Monarch decomposition from the paper:
+    Gemm0 -> Mul(twiddle) -> Transpose -> Gemm1
+x: (B, N1, N2), w0: (N1, N1), tw: (N1, N2), w1: (N2, N2) -> out (B, N2, N1).
+
+``monarch_conv_ref`` composes two passes around a pointwise filter — the
+FlashFFTConv structure (FFT -> filter -> iFFT) the paper benchmarks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def monarch_ref(x, w0, tw, w1):
+    a = jnp.einsum("ij,bjk->bik", w0, x, preferred_element_type=jnp.float32)
+    a = a * tw
+    at = a.transpose(0, 2, 1)                       # (B, N2, N1)
+    out = jnp.einsum("ij,bjk->bik", w1, at.astype(w1.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def monarch_unfused_ref(x, w0, tw, w1):
+    """Same math, op-by-op with materialization between each step (the
+    paper's unfused baseline). Numerically identical to monarch_ref."""
+    a = jnp.einsum("ij,bjk->bik", w0, x, preferred_element_type=jnp.float32)
+    a = a.astype(x.dtype)                           # materialize
+    a = (a * tw).astype(x.dtype)                    # materialize
+    at = a.transpose(0, 2, 1)                       # materialize
+    out = jnp.einsum("ij,bjk->bik", w1, at, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def monarch_conv_ref(x, w0, tw, w1, filt, w0i, twi, w1i):
+    """FFT-conv structure: monarch -> pointwise filter -> inverse monarch."""
+    f = monarch_ref(x, w0, tw, w1)                  # (B, N2, N1)
+    f = f * filt                                    # pointwise filter (N2, N1)
+    return monarch_ref(f, w0i, twi, w1i)            # (B, N1, N2) back

@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, training and CoE serving
+drivers.
+
+Deliberately empty of imports: ``python -m repro.launch.dryrun`` executes
+this package __init__ BEFORE dryrun's first two lines set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` — importing jax
+here would lock the device count at 1 and break the multi-pod dry-run.
+Import submodules directly (repro.launch.mesh, .dryrun, .train, .serve).
+"""

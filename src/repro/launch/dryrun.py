@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the REAL step function (the same one train.py /
+serve.py run) against ShapeDtypeStruct stand-ins on the production mesh,
+compiles it, and records memory_analysis / cost_analysis / collective bytes
+into results/dryrun.json for the roofline analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x7b --cell decode_32k
+    python -m repro.launch.dryrun --all                  # every cell, both meshes
+    python -m repro.launch.dryrun --arch ... --multi-pod-only
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPE_CELLS, cell_applicable, get_config,
+                           pad_for_tp)
+from repro.distributed import stepfn
+from repro.distributed.ctx import activation_sharding
+from repro.distributed import partitioning as part
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (RooflineTerms, collective_bytes_from_hlo,
+                                   model_flops_cell)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+
+def _load():
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def _save(d):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(d, indent=1, default=str))
+
+
+def _lower_for(cfg, cell, mesh):
+    """Lower the cell's step function for this cfg on this mesh."""
+    import contextlib
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import ctx as _c
+    from repro.models import get_model
+    model = get_model(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    dp = part.data_axes(mesh)
+    named = {}
+    if (_c.perf().moe_dispatch_constraint and cfg.n_experts
+            and cfg.n_experts % mesh.shape["model"] == 0):
+        named["moe_dispatch"] = P("model", None, None)
+    named_cm = _c.named_shardings(**named) if named else contextlib.nullcontext()
+    if cell.kind == "train":
+        fn, state_sh, batch_sh_fn = stepfn.make_train_step(cfg, mesh, jit=False)
+        state = stepfn.abstract_train_state(cfg, mesh)
+        batch = _abstract_batch(model.input_specs(cell), mesh)
+        jfn = jax.jit(fn, in_shardings=(state_sh, None),
+                      out_shardings=(state_sh, None), donate_argnums=(0,))
+        act_ps = P(dp, "model", None) if _c.perf().activation_sp else None
+        with mesh, named_cm, _c.mesh_ctx(mesh):
+            with activation_sharding(act_ps):
+                return jfn.lower(state, batch)
+    elif cell.kind == "prefill":
+        fn, param_sh, cache_sh = stepfn.make_prefill_step(cfg, mesh, S + 128,
+                                                          batch=B, jit=False)
+        params = _abstract_sharded_params(cfg, mesh)
+        batch = _abstract_batch(model.input_specs(cell), mesh)
+        logits_sh = NamedSharding(
+            mesh, part.fit_pspec((B, cfg.vocab_size), P(dp, None), mesh))
+        jfn = jax.jit(fn, in_shardings=(param_sh, None),
+                      out_shardings=(logits_sh, cache_sh))
+        with mesh, named_cm, _c.mesh_ctx(mesh):
+            return jfn.lower(params, batch)
+    else:  # decode
+        fn, param_sh, cache_sh = stepfn.make_decode_step(cfg, mesh, batch=B,
+                                                         max_len=S, jit=False)
+        params = _abstract_sharded_params(cfg, mesh)
+        cache = stepfn.abstract_cache(cfg, mesh, B, S)
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        logits_sh = NamedSharding(
+            mesh, part.fit_pspec((B, cfg.vocab_size), P(dp, None), mesh))
+        jfn = jax.jit(fn, in_shardings=(param_sh, cache_sh, None, None),
+                      out_shardings=(logits_sh, cache_sh), donate_argnums=(1,))
+        with mesh, named_cm, _c.mesh_ctx(mesh):
+            return jfn.lower(params, cache, tokens, pos)
+
+
+def lower_cell(arch: str, cell_name: str, multi_pod: bool, *,
+               verbose: bool = True):
+    from repro.configs.base import SHAPE_CELLS as CELLS
+    cell = next(c for c in CELLS if c.name == cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    cfg = pad_for_tp(get_config(arch), tp)
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    from jax.sharding import PartitionSpec as P
+
+    t0 = time.time()
+    lowered = _lower_for(cfg, cell, mesh)
+    lower_s = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    chips = int(__import__("numpy").prod(list(mesh.shape.values())))
+    # cost_analysis and the HLO module are the per-device SPMD program;
+    # globalize so the spec's formulas (X / (chips * peak)) apply directly.
+    terms = RooflineTerms(
+        arch=arch, cell=cell_name,
+        mesh="multi-pod(2,16,16)" if multi_pod else "single-pod(16,16)",
+        chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)) * chips,
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)) * chips,
+        collective_bytes=float(sum(coll.values())) * chips,
+        collective_breakdown=coll,
+        model_flops=model_flops_cell(cfg, cell),
+    )
+    rec = {
+        "status": "ok",
+        "lower_s": round(lower_s, 1),
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+        },
+        "roofline": terms.as_dict(),
+    }
+    if verbose:
+        print(f"[{arch} x {cell_name} x {terms.mesh}] compile={compile_s:.0f}s")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB"
+              f" temp={mem.temp_size_in_bytes/2**30:.2f}GiB"
+              f" out={mem.output_size_in_bytes/2**30:.2f}GiB /device")
+        print(f"  cost_analysis: flops={terms.hlo_flops:.3e}"
+              f" bytes={terms.hlo_bytes:.3e} coll_bytes={terms.collective_bytes:.3e}")
+        print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms"
+              f" memory={terms.memory_s*1e3:.2f}ms"
+              f" collective={terms.collective_s*1e3:.2f}ms"
+              f" -> {terms.bottleneck}-bound"
+              f" useful={terms.useful_flops_ratio:.2f}"
+              f" roofline_frac={terms.roofline_fraction:.3f}")
+    return rec
+
+
+def _abstract_batch(batch_specs, mesh):
+    """Attach (pod,data)-sharded batch-dim shardings where divisible."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = part.data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def f(s):
+        lead = dp if (dp and s.shape[0] % total == 0) else None
+        sp = P(lead, *([None] * (len(s.shape) - 1)))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, sp))
+    return jax.tree.map(f, batch_specs)
+
+
+def _abstract_sharded_params(cfg, mesh):
+    from jax.sharding import NamedSharding
+    from repro.models import get_model
+    from repro.models.common import ParamSpec
+    model = get_model(cfg)
+    specs = model.param_specs()
+    pspecs = part.param_pspecs(specs, mesh)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        specs, pspecs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def compile_cost(cfg, cell, multi_pod, unroll_layers):
+    """Per-device (flops, bytes, coll) for a (possibly reduced-depth) cfg,
+    with layer scans optionally unrolled — used by the loop corrector."""
+    from repro.distributed.ctx import unrolled_layer_scans
+    import contextlib
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cm = unrolled_layer_scans() if unroll_layers else contextlib.nullcontext()
+    with cm:
+        lowered = _lower_for(cfg, cell, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    chips = int(__import__("numpy").prod(list(mesh.shape.values())))
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(sum(coll.values())),
+            "coll_breakdown": coll,
+            "chips": chips}
+
+
+def correct_cell(arch: str, cell_name: str, multi_pod: bool, rec: dict,
+                 verbose=True):
+    """Attach loop-corrected roofline terms to an existing 'ok' record."""
+    from repro.launch.loopfix import corrected_cell_costs
+    from repro.configs.base import SHAPE_CELLS as CELLS
+    cell = next(c for c in CELLS if c.name == cell_name)
+    cfg = pad_for_tp(get_config(arch), 16)
+    out = corrected_cell_costs(arch, cell_name, multi_pod, compile_cost)
+    chips = rec["roofline"]["chips"]
+    terms = RooflineTerms(
+        arch=arch, cell=cell_name, mesh=rec["roofline"]["mesh"], chips=chips,
+        hlo_flops=out["flops"] * chips,
+        hlo_bytes=out["bytes"] * chips,
+        collective_bytes=out["coll"] * chips,
+        collective_breakdown=rec["roofline"]["collective_breakdown"],
+        model_flops=model_flops_cell(cfg, cell),
+    )
+    rec["roofline_raw"] = rec.get("roofline_raw", rec["roofline"])
+    rec["roofline"] = terms.as_dict()
+    rec["loopfix"] = {k: out[k] for k in
+                      ("flops_body", "bytes_body", "coll_body", "units",
+                       "inner_flops_global", "inner_bytes_global")}
+    if verbose:
+        print(f"[corrected {arch} x {cell_name} x {terms.mesh}] "
+              f"compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"-> {terms.bottleneck} useful={terms.useful_flops_ratio:.2f} "
+              f"frac={terms.roofline_fraction:.4f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--correct", action="store_true",
+                    help="add loop-corrected roofline terms to ok cells")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = _load()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    cells = [args.cell] if args.cell else [c.name for c in SHAPE_CELLS]
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    failures = []
+    for arch in archs:
+        for cell in cells:
+            for mp in meshes:
+                key = f"{arch}|{cell}|{'multi' if mp else 'single'}"
+                cached = key in results and \
+                    results[key].get("status") in ("ok", "skipped")
+                if cached and not args.force and not args.correct:
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                if args.correct:
+                    rec = results.get(key)
+                    if not rec or rec.get("status") != "ok":
+                        continue
+                    if "loopfix" in rec and not args.force:
+                        print(f"[corrected-cached] {key}")
+                        continue
+                    try:
+                        rec = correct_cell(arch, cell, mp, rec)
+                    except Exception as e:
+                        traceback.print_exc()
+                        failures.append(key)
+                    results[key] = rec
+                    _save(results)
+                    continue
+                try:
+                    rec = lower_cell(arch, cell, mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(key)
+                results[key] = rec
+                _save(results)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete:", len(results), "cells recorded")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Loop-corrected roofline costs.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (verified empirically:
+scan(length=N) reports 1/N of the unrolled flops), so the raw
+cost_analysis / HLO-collective numbers undercount everything inside scans.
+
+Correction strategy (exact for the dominant layer loop):
+  1. compile the SAME cell twice at reduced depth (1 and 2 layer-units) with
+     the layer scan fully UNROLLED (ctx.unrolled_layer_scans) — costs are
+     then exact and linear in depth: cost(u) = outside + u * body;
+  2. body = cost(2) - cost(1); corrected = cost(1) + (U_true - 1) * body;
+  3. loops INSIDE a layer (streaming-attention block pairs, mLSTM chunk
+     scan, sLSTM time scan) are still while-loops counted once — add
+     analytic per-layer corrections (flops + bytes), x4 for training
+     (forward + remat recompute + backward), x1 otherwise.
+
+Collective bytes follow the same two-point extrapolation (inner loops carry
+no collectives: attention tiles and recurrences are shard-local).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.layers import _block_pairs
+
+
+# ----------------------------------------------------------------------
+# reduced-depth configs (one/two "layer units" per family)
+# ----------------------------------------------------------------------
+
+def unit_counts(cfg: ModelConfig) -> float:
+    """True number of layer-units the scan iterates (per-family)."""
+    if cfg.family in ("dense", "moe"):
+        return cfg.n_layers
+    if cfg.family == "mla_moe":
+        return cfg.n_layers - cfg.first_dense_layers   # dense layer0 is in 'outside'
+    if cfg.family == "encdec":
+        return cfg.n_layers                             # enc+dec scale together
+    if cfg.family == "rglru":
+        plen = len(cfg.block_pattern)
+        groups = cfg.n_layers // plen
+        tail = cfg.n_layers % plen
+        return groups + (tail / plen)                   # tail ~ fraction of a group
+    if cfg.family == "xlstm":
+        return cfg.n_layers // cfg.slstm_every
+    raise KeyError(cfg.family)
+
+
+def reduced_depth_cfg(cfg: ModelConfig, units: int) -> ModelConfig:
+    if cfg.family in ("dense", "moe"):
+        return dataclasses.replace(cfg, n_layers=units)
+    if cfg.family == "mla_moe":
+        return dataclasses.replace(cfg,
+                                   n_layers=cfg.first_dense_layers + units)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=units,
+                                   n_encoder_layers=units)
+    if cfg.family == "rglru":
+        return dataclasses.replace(cfg,
+                                   n_layers=len(cfg.block_pattern) * units)
+    if cfg.family == "xlstm":
+        return dataclasses.replace(cfg, n_layers=cfg.slstm_every * units)
+    raise KeyError(cfg.family)
+
+
+# ----------------------------------------------------------------------
+# analytic inner-loop corrections (per layer-unit, missing portion)
+# ----------------------------------------------------------------------
+
+def _attn_pairs_missing(cfg, B, S, window) -> Tuple[float, float]:
+    """(flops, bytes) missed per attention layer by the once-counted
+    block-pair scan. Zero when the naive (loop-free) path runs."""
+    blk = cfg.attn_chunk
+    if S <= 2 * blk or S % blk:
+        return 0.0, 0.0
+    nq = S // blk
+    pairs = len(_block_pairs(nq, nq, blk, causal=True, window=window))
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.head_dim
+    dv = cfg.v_head_dim or dh
+    if cfg.family == "mla_moe":
+        dh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        dv = cfg.v_head_dim
+    f_pair = (2 * B * blk * blk * Hq * dh          # scores
+              + 2 * B * blk * blk * Hq * dv        # values
+              + 8 * B * blk * blk * Hq)            # mask/exp/sum/max
+    b_pair = (2 * B * blk * (Hq * dh + 2 * Hkv * dh)      # q/k/v tiles bf16
+              + 6 * B * blk * blk * Hq * 4                # score-chain f32
+              + 4 * B * blk * Hq * dv * 4)                # acc slice r/w f32
+    return (pairs - 1) * f_pair, (pairs - 1) * b_pair
+
+
+def _mlstm_chunks_missing(cfg, B, S) -> Tuple[float, float]:
+    from repro.models.xlstm import _dims, _CHUNK
+    D, Di, H, dh, _ = _dims(cfg)
+    c = min(_CHUNK, S)
+    nc = S // c
+    if nc <= 1:
+        return 0.0, 0.0
+    f_chunk = (2 * B * c * c * H * dh * 2          # qk^T and @v
+               + 2 * B * c * c * H * dh            # n_intra
+               + 8 * B * c * c * H                 # wmat/exp/mask
+               + 2 * 2 * B * c * H * dh * dh       # state update + h_inter
+               )
+    b_chunk = (12 * B * c * c * H * 4              # (B,c,c,H) chains f32
+               + 4 * B * H * dh * dh * 4           # C state r/w f32
+               + 6 * B * c * H * dh * 4)
+    return (nc - 1) * f_chunk, (nc - 1) * b_chunk
+
+
+def _slstm_steps_missing(cfg, B, S) -> Tuple[float, float]:
+    D = cfg.d_model
+    H = cfg.slstm_heads
+    dh = D // H
+    if S <= 1:
+        return 0.0, 0.0
+    f_step = 4 * (2 * B * D * D + 2 * B * H * dh * dh) + 20 * B * D
+    # weights re-read per step (VMEM residency would remove this — see
+    # EXPERIMENTS.md §Perf notes)
+    b_step = 4 * (D * D + H * dh * dh) * 2 + 10 * B * D * 4
+    return (S - 1) * f_step, (S - 1) * b_step
+
+
+def inner_corrections(cfg: ModelConfig, cell: ShapeCell) -> Tuple[float, float]:
+    """Total (flops, bytes) to ADD on top of the layer-extrapolated cost.
+    Scaled x4 for training (fwd + remat recompute + 2x bwd), x1 otherwise.
+    Decode cells have no inner loops (single-token einsums)."""
+    if cell.kind == "decode":
+        return 0.0, 0.0
+    B, S = cell.global_batch, cell.seq_len
+    scale = 4.0 if cell.kind == "train" else 1.0
+    f = b = 0.0
+    if cfg.family in ("dense", "moe", "mla_moe"):
+        pf, pb = _attn_pairs_missing(cfg, B, S, cfg.sliding_window)
+        f += pf * cfg.n_layers
+        b += pb * cfg.n_layers
+    elif cfg.family == "encdec":
+        pf, pb = _attn_pairs_missing(cfg, B, S, 0)      # decoder self-attn
+        f += pf * cfg.n_layers
+        b += pb * cfg.n_layers
+        # encoder attn is naive at 1500 frames (loop-free): no correction
+    elif cfg.family == "rglru":
+        pf, pb = _attn_pairs_missing(cfg, B, S, cfg.sliding_window)
+        n_attn = sum(1 for x in cfg.block_pattern if x == "attn") * (
+            cfg.n_layers // len(cfg.block_pattern))
+        f += pf * n_attn
+        b += pb * n_attn
+    elif cfg.family == "xlstm":
+        mf, mb = _mlstm_chunks_missing(cfg, B, S)
+        n_m = cfg.n_layers - cfg.n_layers // cfg.slstm_every
+        sf, sb = _slstm_steps_missing(cfg, B, S)
+        n_s = cfg.n_layers // cfg.slstm_every
+        f += mf * n_m + sf * n_s
+        b += mb * n_m + sb * n_s
+    return f * scale, b * scale
+
+
+# ----------------------------------------------------------------------
+# corrected cell costs
+# ----------------------------------------------------------------------
+
+def corrected_cell_costs(arch: str, cell_name: str, multi_pod: bool,
+                         compile_fn) -> Dict[str, float]:
+    """compile_fn(cfg, cell, multi_pod, unroll_layers) -> dict with
+    per-device 'flops', 'bytes', 'coll' (raw, NOT globalized).
+
+    Returns corrected per-device totals + diagnostics."""
+    from repro.configs import get_config, pad_for_tp
+    from repro.configs.base import SHAPE_CELLS
+    cell = next(c for c in SHAPE_CELLS if c.name == cell_name)
+    cfg = pad_for_tp(get_config(arch), 16)
+
+    c1 = compile_fn(reduced_depth_cfg(cfg, 1), cell, multi_pod, True)
+    c2 = compile_fn(reduced_depth_cfg(cfg, 2), cell, multi_pod, True)
+    U = unit_counts(cfg)
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        body = max(c2[k] - c1[k], 0.0)
+        outside = max(c1[k] - body, 0.0)
+        out[k] = outside + U * body
+        out[f"{k}_body"] = body
+        out[f"{k}_outside"] = outside
+    fi, bi = inner_corrections(cfg, cell)
+    # inner corrections are global; compile costs are per-device — convert
+    chips = c1.get("chips", 1)
+    out["flops"] += fi / chips
+    out["bytes"] += bi / chips
+    out["inner_flops_global"] = fi
+    out["inner_bytes_global"] = bi
+    out["units"] = U
+    return out

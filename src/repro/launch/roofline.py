@@ -1,0 +1,206 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds (see EXPERIMENTS.md §Roofline):
+    compute    = HLO_FLOPs / (chips x 197e12)         [bf16 peak / chip]
+    memory     = HLO_bytes / (chips x 819e9)          [HBM bw / chip]
+    collective = collective_bytes / (chips x 50e9)    [ICI bw / link]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the optimized HLO text (result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_\[\],{} ]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _line_result_bytes(line: str) -> int:
+    """Sum bytes of the result shapes on an HLO op line (before the op name)."""
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type annotation sits between '=' and the op name
+    m = re.search(r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|"
+                  r"all-to-all|collective-permute)", line)
+    if not m:
+        return 0
+    seg = m.group(1)
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes, summed over the module. ``-start``
+    variants are counted; ``-done`` ops are skipped (same tensor)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        out[kind] = out.get(kind, 0) + _line_result_bytes(line)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float
+    per_device_peak_bytes: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOPs achieved vs chip peak, assuming the step runs
+        at the max of the three terms (MFU-style score for compute;
+        bandwidth-utilization analogue when memory/collective bound)."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_s if self.step_s else 0.0
+
+    def as_dict(self):
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bottleneck=self.bottleneck,
+                 step_s=self.step_s, useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def min_traffic_bytes(cfg, cell) -> float:
+    """Analytic lower bound on global HBM traffic per step: every live byte
+    moves once. This is the floor the §Perf loop pushes the HLO-bytes term
+    toward (HLO 'bytes accessed' is an upper bound that counts per-op I/O)."""
+    import numpy as np
+    N = cfg.n_params()
+    Na = cfg.n_active_params()
+    B, S = cell.global_batch, cell.seq_len
+    D = cfg.d_model
+    L = cfg.n_layers
+    act_token_bytes = 2 * D * L  # one residual read+write per layer, bf16
+    if cell.kind == "train":
+        tokens = B * S
+        # params read (fwd+bwd) + grad write + adam moments r/w (f32) +
+        # master update; activations: residuals once + remat recompute
+        return (N * 2 * 3) + (N * 4 * 4) + tokens * act_token_bytes * 3
+    if cell.kind == "prefill":
+        tokens = B * S
+        kv = _cache_bytes(cfg, B, S)
+        return Na * 2 + tokens * act_token_bytes * 2 + kv
+    # decode
+    kv = _cache_bytes(cfg, B, min(S, cfg.sliding_window or S))
+    return Na * 2 + kv + B * act_token_bytes
+
+
+def _cache_bytes(cfg, B, S) -> float:
+    if cfg.family == "mla_moe":
+        return 2.0 * cfg.n_layers * B * S * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+    if cfg.family == "rglru":
+        W = min(S, cfg.sliding_window or S)
+        n_attn = max(1, cfg.n_layers // len(cfg.block_pattern))
+        rec = (cfg.n_layers - n_attn) * B * cfg.d_rnn * 4
+        return 2.0 * n_attn * B * W * cfg.n_kv_heads * cfg.head_dim * 2 + rec
+    if cfg.family == "xlstm":
+        from repro.models.xlstm import _dims
+        Dm, Di, H, dh, _ = _dims(cfg)
+        return cfg.n_layers * B * H * dh * dh * 4.0
+    return 2.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim * 2
+
+
+def model_flops_cell(cfg, cell) -> float:
+    """Analytic useful FLOPs for the cell (6ND train / 2ND decode + attn)."""
+    N = cfg.n_active_params()
+    B, S = cell.global_batch, cell.seq_len
+    dh = cfg.head_dim or 0
+    kv = cfg.n_kv_heads
+    if cell.kind == "train":
+        tokens = B * S
+        base = 6.0 * N * tokens
+        # attention score/value flops (forward 2x2, backward x2 => x3 of fwd)
+        attn = 0.0
+        if cfg.family in ("dense", "moe", "encdec"):
+            ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            attn = 3 * 2 * 2 * cfg.n_layers * B * S * (ctx / 2) * cfg.n_heads * dh
+        return base + attn
+    if cell.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * N * tokens
+        attn = 0.0
+        if cfg.family in ("dense", "moe", "encdec", "mla_moe"):
+            ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+            hd = dh if cfg.family != "mla_moe" else (cfg.qk_nope_dim +
+                                                     cfg.qk_rope_dim)
+            attn = 2 * 2 * cfg.n_layers * B * S * (ctx / 2) * cfg.n_heads * hd
+        return base + attn
+    # decode: one token, context S
+    base = 2.0 * N * B
+    attn = 0.0
+    if cfg.family in ("dense", "moe", "encdec"):
+        ctx = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        attn = 2 * 2 * cfg.n_layers * B * ctx * cfg.n_kv_heads * \
+            (cfg.n_heads // max(cfg.n_kv_heads, 1)) * dh
+    elif cfg.family == "mla_moe":
+        attn = 2 * 2 * cfg.n_layers * B * S * cfg.n_heads * \
+            (cfg.kv_lora_rank + cfg.qk_rope_dim) / 2
+    return base + attn

@@ -1,0 +1,7 @@
+from repro.models.registry import Model, get_model
+from repro.models.common import (
+    ParamSpec, spec, abstract_params, init_params, param_count, param_bytes,
+)
+
+__all__ = ["Model", "get_model", "ParamSpec", "spec", "abstract_params",
+           "init_params", "param_count", "param_bytes"]

@@ -1,0 +1,90 @@
+"""Param-spec machinery shared by all model families.
+
+Models declare their parameters as a pytree of :class:`ParamSpec` (shape,
+dtype, *logical axes*, init). From that single declaration we derive:
+  * abstract params   (ShapeDtypeStruct — used by the multi-pod dry-run),
+  * materialized init (used by smoke tests / examples),
+  * PartitionSpecs    (distributed/partitioning.py maps logical→mesh axes).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[str, ...]      # logical axis names, len == ndim
+    init: str = "normal"       # 'normal' | 'zeros' | 'ones'
+    fan_in_axes: Tuple[int, ...] = ()   # dims contributing to fan-in scaling
+
+
+def spec(shape, axes, dtype=jnp.bfloat16, init="normal", fan_in_axes=None):
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    assert len(shape) == len(axes), (shape, axes)
+    if fan_in_axes is None:
+        # default: all but the last axis feed the output axis
+        fan_in_axes = tuple(range(len(shape) - 1)) if init == "normal" else ()
+    return ParamSpec(shape, dtype, axes, init, tuple(fan_in_axes))
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree for .lower() — never allocates."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(out)
+
+
+def init_params(rng, specs):
+    """Materialize parameters. Deterministic per tree-path."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    leaves = []
+    for path, s in flat:
+        h = int.from_bytes(hashlib.sha256(_path_str(path).encode()).digest()[:4], "big")
+        key = jax.random.fold_in(rng, h)
+        if s.init == "zeros":
+            leaves.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            leaves.append(jnp.ones(s.shape, s.dtype))
+        else:
+            fan_in = int(np.prod([s.shape[i] for i in s.fan_in_axes])) or 1
+            std = 1.0 / np.sqrt(fan_in)
+            leaves.append(
+                (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+            )
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_count(specs) -> int:
+    return int(
+        sum(
+            int(np.prod(s.shape))
+            for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        )
+    )
+
+
+def param_bytes(specs) -> int:
+    return int(
+        sum(
+            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+            for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        )
+    )

@@ -1,0 +1,200 @@
+"""Encoder-decoder family (whisper-small backbone).
+
+The audio frontend (mel conv stack) is a stub per the assignment: inputs are
+precomputed frame embeddings (B, enc_seq, d_model). Positions are sinusoidal
+(no learned table → any sequence length lowers cleanly).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models.common import spec
+
+
+def sinusoid_pos(S, D, offset=0):
+    pos = np.arange(S) if isinstance(S, int) else S
+    pos = jnp.asarray(pos, jnp.float32) + offset
+    inv = 1.0 / (10000 ** (np.arange(0, D, 2) / D))
+    ang = pos[:, None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(jnp.bfloat16)
+
+
+def _attn_specs(cfg, cross=False):
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    p = {
+        "norm": L.norm_specs(cfg),
+        "wq": spec((D, H, dh), ("embed", "q_heads", "head_dim")),
+        "wk": spec((D, H, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((D, H, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((H, dh, D), ("q_heads", "head_dim", "embed"), fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = spec((H, dh), ("q_heads", "head_dim"), init="zeros")
+        p["bv"] = spec((H, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.attn_out_bias:
+        p["bo"] = spec((D,), ("embed",), init="zeros")
+    return p
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: s._replace(shape=(n,) + s.shape, axes=("layers",) + s.axes,
+                             fan_in_axes=tuple(a + 1 for a in s.fan_in_axes)),
+        tree,
+        is_leaf=lambda x: hasattr(x, "axes") and not isinstance(x, dict),
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    enc_layer = {"attn": _attn_specs(cfg), "mlp_norm": L.norm_specs(cfg),
+                 "mlp": L.ffn_specs(cfg)}
+    dec_layer = {"self_attn": _attn_specs(cfg), "cross_attn": _attn_specs(cfg),
+                 "mlp_norm": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+    return {
+        "embed": {"tok": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              fan_in_axes=())},
+        "enc_layers": _stack(enc_layer, cfg.n_encoder_layers),
+        "enc_final_norm": L.norm_specs(cfg),
+        "dec_layers": _stack(dec_layer, cfg.n_layers),
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def _proj_qkv(cfg, p, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q, v = q + p["bq"], v + p["bv"]
+    return q, k, v
+
+
+def _out(cfg, p, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return y
+
+
+def encode(cfg: ModelConfig, params, enc_embeds):
+    B, S, D = enc_embeds.shape
+    h = enc_embeds.astype(jnp.bfloat16) + sinusoid_pos(S, D)[None]
+
+    def body(hh, lp):
+        hn = L.apply_norm(cfg, lp["attn"]["norm"], hh)
+        q, k, v = _proj_qkv(cfg, lp["attn"], hn, hn)
+        o = L.attention(cfg, q, k, v, causal=False)
+        hh = hh + _out(cfg, lp["attn"], o)
+        hn = L.apply_norm(cfg, lp["mlp_norm"], hh)
+        hh = hh + L.ffn_apply(cfg, lp["mlp"], hn)
+        return hh, None
+
+    h, _ = ctx.lscan(body, h, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_final_norm"], h)
+
+
+def _decoder(cfg, params, tokens, enc_out, *, return_cache=False, last_only=False):
+    B, S = tokens.shape
+    D = cfg.d_model
+    h = params["embed"]["tok"][tokens] + sinusoid_pos(S, D)[None]
+
+    def body(hh, lp):
+        hn = L.apply_norm(cfg, lp["self_attn"]["norm"], hh)
+        q, k, v = _proj_qkv(cfg, lp["self_attn"], hn, hn)
+        o = L.attention(cfg, q, k, v, causal=True)
+        hh = hh + _out(cfg, lp["self_attn"], o)
+        hn = L.apply_norm(cfg, lp["cross_attn"]["norm"], hh)
+        qc, kc, vc = _proj_qkv(cfg, lp["cross_attn"], hn, enc_out)
+        oc = L.attention(cfg, qc, kc, vc, causal=False)
+        hh = hh + _out(cfg, lp["cross_attn"], oc)
+        hn = L.apply_norm(cfg, lp["mlp_norm"], hh)
+        hh = hh + L.ffn_apply(cfg, lp["mlp"], hn)
+        return hh, (k, v, kc, vc)
+
+    h, kv = ctx.lscan(body, h, params["dec_layers"])
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if last_only:
+        h = h[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["tok"])
+    if return_cache:
+        return logits, kv
+    return logits
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=False, last_only=False):
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    return _decoder(cfg, params, batch["tokens"], enc_out, last_only=last_only)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.bfloat16
+    Ld, H, dh, Se = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.encoder_seq
+    return {
+        "k": jax.ShapeDtypeStruct((Ld, batch, max_len, H, dh), dt),
+        "v": jax.ShapeDtypeStruct((Ld, batch, max_len, H, dh), dt),
+        "cross_k": jax.ShapeDtypeStruct((Ld, batch, Se, H, dh), dt),
+        "cross_v": jax.ShapeDtypeStruct((Ld, batch, Se, H, dh), dt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    logits, (k, v, kc, vc) = _decoder(cfg, params, tokens, enc_out,
+                                      return_cache=True, last_only=True)
+    cache = init_cache(cfg, B, max_len)
+    cache["k"] = cache["k"].at[:, :, :S].set(k)
+    cache["v"] = cache["v"].at[:, :, :S].set(v)
+    cache["cross_k"], cache["cross_v"] = kc, vc
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    B = tokens.shape[0]
+    D = cfg.d_model
+    S = cache["k"].shape[2]
+    h = params["embed"]["tok"][tokens] + sinusoid_pos(jnp.full((1,), pos), D)[None]
+    valid = (jnp.arange(S)[None] < pos + 1) & jnp.ones((B, 1), bool)
+    ev = jnp.ones((B, cache["cross_k"].shape[2]), bool)
+
+    def body(hh, xs):
+        lp, kc, vc, ck, cv = xs
+        hn = L.apply_norm(cfg, lp["self_attn"]["norm"], hh)
+        q, k, v = _proj_qkv(cfg, lp["self_attn"], hn, hn)
+        kc = ctx.constrain_named("cache_kv",
+            jax.lax.dynamic_update_slice_in_dim(kc, k, pos, 1))
+        vc = ctx.constrain_named("cache_kv",
+            jax.lax.dynamic_update_slice_in_dim(vc, v, pos, 1))
+        o = L.decode_attention(q, kc, vc, valid)
+        hh = hh + _out(cfg, lp["self_attn"], o)
+        hn = L.apply_norm(cfg, lp["cross_attn"]["norm"], hh)
+        qc = jnp.einsum("bsd,dhk->bshk", hn, lp["cross_attn"]["wq"])
+        if cfg.qkv_bias:
+            qc = qc + lp["cross_attn"]["bq"]
+        oc = L.decode_attention(qc, ck, cv, ev)
+        hh = hh + _out(cfg, lp["cross_attn"], oc)
+        hn = L.apply_norm(cfg, lp["mlp_norm"], hh)
+        hh = hh + L.ffn_apply(cfg, lp["mlp"], hn)
+        return hh, (kc, vc)
+
+    h, (kc, vc) = ctx.lscan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache, k=kc, v=vc)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["tok"])[:, 0]
+    return logits, cache

@@ -1,0 +1,99 @@
+"""Uniform Model API over all architecture families.
+
+    model = get_model(cfg)
+    specs  = model.param_specs()
+    params = model.init(rng)
+    logits = model.forward(params, batch)
+    last, cache = model.prefill(params, batch, max_len)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+    batch = model.input_specs(cell)      # ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import common
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    # ---- params ----
+    def param_specs(self):
+        return self._mod.param_specs(self.cfg)
+
+    def abstract_params(self):
+        return common.abstract_params(self.param_specs())
+
+    def init(self, rng):
+        return common.init_params(rng, self.param_specs())
+
+    # ---- compute ----
+    def forward(self, params, batch, *, remat=False, last_only=False):
+        return self._mod.forward(self.cfg, params, batch, remat=remat,
+                                 last_only=last_only)
+
+    def prefill(self, params, batch, max_len):
+        if self.cfg.family == "encdec":
+            return self._mod.prefill(self.cfg, params, batch, max_len)
+        return self._mod.prefill(self.cfg, params, batch["tokens"], max_len)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self._mod.decode_step(self.cfg, params, cache, tokens, pos)
+
+    def cache_spec(self, batch, max_len):
+        return self._mod.cache_spec(self.cfg, batch, max_len)
+
+    def init_cache(self, batch, max_len):
+        return self._mod.init_cache(self.cfg, batch, max_len)
+
+    # ---- dry-run inputs ----
+    def input_specs(self, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cell.kind == "train":
+            batch = {"tokens": tok(B, S), "targets": tok(B, S)}
+            if cfg.family == "encdec":
+                batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            return batch
+        if cell.kind == "prefill":
+            batch = {"tokens": tok(B, S)}
+            if cfg.family == "encdec":
+                batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            return batch
+        # decode: one new token against a cache of length S
+        return {"tokens": tok(B, 1)}
+
+
+_FAMILY_MODULES = {}
+
+
+def _family_module(family: str):
+    if family not in _FAMILY_MODULES:
+        if family in ("dense", "moe", "mla_moe"):
+            from repro.models import transformer as m
+        elif family == "encdec":
+            from repro.models import encdec as m
+        elif family == "rglru":
+            from repro.models import rglru as m
+        elif family == "xlstm":
+            from repro.models import xlstm as m
+        else:
+            raise KeyError(f"unknown family {family!r}")
+        _FAMILY_MODULES[family] = m
+    return _FAMILY_MODULES[family]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg, _family_module(cfg.family))

@@ -1,0 +1,388 @@
+"""Decoder-only transformer family: dense / moe / mla_moe.
+
+Layer params are stacked along a leading 'layers' axis and iterated with
+``lax.scan`` (keeps HLO size and compile time bounded at 64 layers). Prefill
+emits per-layer K/V as scan outputs — they *are* the KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models.common import spec
+
+
+# ----------------------------------------------------------------------
+# Param specs
+# ----------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig):
+    D, Hq, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "mla_moe":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "norm": L.norm_specs(cfg),
+            "wq": spec((D, Hq, qk), ("embed", "q_heads", "head_dim")),
+            "w_dkv": spec((D, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                          ("embed", "kv_lora")),
+            "kv_norm": {"scale": spec((cfg.kv_lora_rank,), ("kv_lora",), init="ones")},
+            "w_uk": spec((cfg.kv_lora_rank, Hq, cfg.qk_nope_dim),
+                         ("kv_lora", "q_heads", "head_dim")),
+            "w_uv": spec((cfg.kv_lora_rank, Hq, cfg.v_head_dim),
+                         ("kv_lora", "q_heads", "head_dim")),
+            "wo": spec((Hq, cfg.v_head_dim, D), ("q_heads", "head_dim", "embed"),
+                       fan_in_axes=(0, 1)),
+        }
+        return p
+    p = {
+        "norm": L.norm_specs(cfg),
+        "wq": spec((D, Hq, dh), ("embed", "q_heads", "head_dim")),
+        "wk": spec((D, Hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((D, Hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((Hq, dh, D), ("q_heads", "head_dim", "embed"), fan_in_axes=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = spec((Hq, dh), ("q_heads", "head_dim"), init="zeros")
+        p["bk"] = spec((Hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = spec((Hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.attn_out_bias:
+        p["bo"] = spec((D,), ("embed",), init="zeros")
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, moe: bool):
+    p = {"attn": _attn_specs(cfg), "mlp_norm": L.norm_specs(cfg)}
+    if moe:
+        p["mlp"] = L.moe_specs(cfg)
+    else:
+        p["mlp"] = L.ffn_specs(cfg)
+    return p
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: s._replace(shape=(n,) + s.shape, axes=("layers",) + s.axes,
+                             fan_in_axes=tuple(a + 1 for a in s.fan_in_axes)),
+        tree,
+        is_leaf=lambda x: hasattr(x, "axes") and not isinstance(x, dict),
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    moe = cfg.n_experts > 0
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    p: Dict[str, Any] = {
+        "embed": {"tok": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              fan_in_axes=())},
+        "final_norm": L.norm_specs(cfg),
+    }
+    if cfg.first_dense_layers:
+        p["dense_layers"] = _stack(_layer_specs(cfg, moe=False), cfg.first_dense_layers)
+    p["layers"] = _stack(_layer_specs(cfg, moe=moe), n_moe_layers)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return p
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+
+def _dense_attn(cfg, p, x, positions, *, window):
+    h = L.apply_norm(cfg, p["norm"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(cfg, q, positions)
+    k = L.apply_rope(cfg, k, positions)
+    o = L.attention(cfg, q, k, v, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    return x + y, (k, v)
+
+
+def _mla_attn(cfg, p, x, positions):
+    """Train/prefill MLA: expand compressed KV to per-head K/V."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    h = L.apply_norm(cfg, p["norm"], x)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = L.apply_rope(cfg, q_rope, positions)
+
+    ckv_full = h @ p["w_dkv"]                                     # (B,S,lora+rope)
+    c_kv = L.rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]      # (B,S,1,rope)
+    k_rope = L.apply_rope(cfg, k_rope, positions)
+
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsc,chv->bshv", c_kv, p["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.qk_rope_dim))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = L.attention(cfg, q, k, v)
+    y = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return x + y, (c_kv, k_rope[:, :, 0, :])
+
+
+def _mla_attn_decode(cfg, p, x, ckv_cache, krope_cache, pos, valid):
+    """Absorbed MLA decode: attention runs in the compressed c_kv space.
+
+    Beyond-paper optimization: avoids re-expanding per-head K/V every step —
+    per-token work is O(S*(lora+rope)) instead of O(S*H*dh).
+    """
+    B = x.shape[0]
+    h = L.apply_norm(cfg, p["norm"], x)                            # (B,1,D)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    posv = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_rope = L.apply_rope(cfg, q_rope, posv)
+
+    ckv_full = h[:, 0] @ p["w_dkv"]                                # (B,lora+rope)
+    c_new = L.rms_norm(ckv_full[:, : cfg.kv_lora_rank], p["kv_norm"]["scale"])
+    kr_new = L.apply_rope(cfg, ckv_full[:, None, None, cfg.kv_lora_rank:], posv)[:, 0, 0]
+
+    from repro.distributed import ctx as _ctx
+    ckv_cache = _ctx.constrain_named(
+        "cache_mla", jax.lax.dynamic_update_slice_in_dim(ckv_cache, c_new[:, None], pos, 1))
+    krope_cache = _ctx.constrain_named(
+        "cache_mla", jax.lax.dynamic_update_slice_in_dim(krope_cache, kr_new[:, None], pos, 1))
+
+    q_c = jnp.einsum("bihn,chn->bihc", q_nope, p["w_uk"])          # absorb W_UK
+    s = jnp.einsum("bihc,bsc->bhs", q_c, ckv_cache, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bihr,bsr->bhs", q_rope, krope_cache,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhs,bsc->bhc", pattn.astype(ckv_cache.dtype), ckv_cache)
+    ctx = jnp.einsum("bhc,chv->bhv", ctx_c, p["w_uv"])             # absorb W_UV
+    y = jnp.einsum("bhv,hvd->bd", ctx, p["wo"])[:, None]
+    return x + y, ckv_cache, krope_cache
+
+
+def _mlp(cfg, p_norm, p_mlp, x, moe: bool):
+    h = L.apply_norm(cfg, p_norm, x)
+    y = L.moe_apply(cfg, p_mlp, h) if moe else L.ffn_apply(cfg, p_mlp, h)
+    return x + y
+
+
+def _layer(cfg, lp, x, positions, *, moe: bool):
+    if cfg.family == "mla_moe":
+        x, kv = _mla_attn(cfg, lp["attn"], x, positions)
+    else:
+        x, kv = _dense_attn(cfg, lp["attn"], x, positions, window=cfg.sliding_window)
+    x = _mlp(cfg, lp["mlp_norm"], lp["mlp"], x, moe)
+    return x, kv
+
+
+# ----------------------------------------------------------------------
+# Model API
+# ----------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens):
+    return params["embed"]["tok"][tokens]
+
+
+def unembed(cfg, params, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"]["tok"])
+    return h @ params["lm_head"]
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat: bool = False,
+            return_cache: bool = False, last_only: bool = False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = embed_tokens(cfg, params, tokens)
+    if "patch_embeds" in batch:   # VLM stub: prefix replaced by patch embeds
+        pe = batch["patch_embeds"].astype(h.dtype)
+        h = jnp.concatenate([pe, h[:, pe.shape[1]:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    moe = cfg.n_experts > 0
+
+    def dense_body(hh, lp):
+        hh = ctx.constrain(hh)
+        y, kv = _layer(cfg, lp, hh, positions, moe=False)
+        return y, kv
+
+    def body(hh, lp):
+        hh = ctx.constrain(hh)
+        y, kv = _layer(cfg, lp, hh, positions, moe=moe)
+        return y, kv
+
+    if remat:
+        dense_body = jax.checkpoint(dense_body)
+        body = jax.checkpoint(body)
+
+    caches = []
+    if cfg.first_dense_layers:
+        h, kv0 = ctx.lscan(dense_body, h, params["dense_layers"])
+        caches.append(kv0)
+    h, kv = ctx.lscan(body, h, params["layers"])
+    caches.append(kv)
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if last_only:
+        h = h[:, -1:]
+    logits = unembed(cfg, params, h)
+    if return_cache:
+        return logits, caches
+    return logits
+
+
+# ---------------------------- serving --------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree for the decode cache."""
+    dt = jnp.bfloat16
+    if cfg.sliding_window:
+        max_len = min(max_len, cfg.sliding_window)
+    Lm = cfg.n_layers - cfg.first_dense_layers
+    if cfg.family == "mla_moe":
+        mk = lambda l, d: jax.ShapeDtypeStruct((l, batch, max_len, d), dt)
+        c = {"ckv": mk(Lm, cfg.kv_lora_rank), "krope": mk(Lm, cfg.qk_rope_dim)}
+        if cfg.first_dense_layers:
+            c["ckv0"] = mk(cfg.first_dense_layers, cfg.kv_lora_rank)
+            c["krope0"] = mk(cfg.first_dense_layers, cfg.qk_rope_dim)
+        return c
+    sh = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(sh, dt), "v": jax.ShapeDtypeStruct(sh, dt)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_len))
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int):
+    """Run full forward, return (last-token logits, cache filled to S)."""
+    B, S = tokens.shape
+    logits, caches = forward(cfg, params, {"tokens": tokens}, return_cache=True,
+                             last_only=True)
+    cache = init_cache(cfg, B, max_len)
+    W = cfg.sliding_window
+    if cfg.family == "mla_moe":
+        if cfg.first_dense_layers:
+            (c0, kr0), (c1, kr1) = caches
+            cache["ckv0"] = cache["ckv0"].at[:, :, :S].set(c0)
+            cache["krope0"] = cache["krope0"].at[:, :, :S].set(kr0)
+        else:
+            (c1, kr1) = caches[0]
+        cache["ckv"] = cache["ckv"].at[:, :, :S].set(c1)
+        cache["krope"] = cache["krope"].at[:, :, :S].set(kr1)
+    else:
+        k, v = caches[0]
+        if W and S > W:       # keep last W positions, ring-aligned
+            k, v = k[:, :, S - W:], v[:, :, S - W:]
+            roll = (S - W) % W
+            k = jnp.roll(k, roll, axis=2)
+            v = jnp.roll(v, roll, axis=2)
+            cache["k"], cache["v"] = k, v
+        else:
+            cache["k"] = cache["k"].at[:, :, :S].set(k)
+            cache["v"] = cache["v"].at[:, :, :S].set(v)
+    return logits[:, -1], cache
+
+
+def _decode_dense_layer(cfg, lp, hh, kc, vc, idx, posv, valid, moe):
+    p = lp["attn"]
+    hn = L.apply_norm(cfg, p["norm"], hh)
+    q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(cfg, q, posv)
+    k = L.apply_rope(cfg, k, posv)
+    kc = ctx.constrain_named("cache_kv",
+        jax.lax.dynamic_update_slice_in_dim(kc, k, idx, 1))
+    vc = ctx.constrain_named("cache_kv",
+        jax.lax.dynamic_update_slice_in_dim(vc, v, idx, 1))
+    o = L.decode_attention(q, kc, vc, valid)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cfg.attn_out_bias:
+        y = y + p["bo"]
+    hh = hh + y
+    hh = _mlp(cfg, lp["mlp_norm"], lp["mlp"], hh, moe)
+    return hh, (kc, vc)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens (B,1) int32, pos scalar int32 (next position index).
+
+    Returns (logits (B,V), new cache).
+    """
+    B = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens)
+    moe = cfg.n_experts > 0
+    W = cfg.sliding_window
+    posv = jnp.broadcast_to(pos[None, None], (B, 1))
+
+    if cfg.family == "mla_moe":
+        S = cache["ckv"].shape[2]
+        valid = (jnp.arange(S)[None] <= pos) & jnp.ones((B, 1), bool)
+
+        def body(hh, xs):
+            lp, ckv, kr = xs
+            y, ckv2, kr2 = _mla_attn_decode(cfg, lp["attn"], hh, ckv, kr, pos, valid)
+            y = _mlp(cfg, lp["mlp_norm"], lp["mlp"], y, moe)
+            return y, (ckv2, kr2)
+
+        def body_dense(hh, xs):
+            lp, ckv, kr = xs
+            y, ckv2, kr2 = _mla_attn_decode(cfg, lp["attn"], hh, ckv, kr, pos, valid)
+            y = _mlp(cfg, lp["mlp_norm"], lp["mlp"], y, moe=False)
+            return y, (ckv2, kr2)
+
+        if cfg.first_dense_layers:
+            h, (c0, r0) = ctx.lscan(
+                body_dense, h, (params["dense_layers"], cache["ckv0"], cache["krope0"]))
+            cache = dict(cache, ckv0=c0, krope0=r0)
+        h, (c1, r1) = ctx.lscan(body, h, (params["layers"], cache["ckv"], cache["krope"]))
+        cache = dict(cache, ckv=c1, krope=r1)
+    else:
+        S = cache["k"].shape[2]
+        idx = jnp.mod(pos, S) if W else pos
+        valid = (jnp.arange(S)[None] < jnp.minimum(pos + 1, S)) & jnp.ones((B, 1), bool)
+
+        def body(hh, xs):
+            lp, kc, vc = xs
+            return _decode_dense_layer(cfg, lp, hh, kc, vc, idx, posv, valid,
+                                       moe)
+
+        if ctx.perf().decode_cache_carry:
+            # carry the full stacked cache; per-layer in-place slice updates
+            def body_carry(carry, xs):
+                hh, kfull, vfull = carry
+                lp, li = xs
+                kc = jax.lax.dynamic_index_in_dim(kfull, li, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vfull, li, 0, keepdims=False)
+                hh, (kc2, vc2) = _decode_dense_layer(
+                    cfg, lp, hh, kc, vc, idx, posv, valid, moe)
+                kfull = jax.lax.dynamic_update_index_in_dim(kfull, kc2, li, 0)
+                vfull = jax.lax.dynamic_update_index_in_dim(vfull, vc2, li, 0)
+                return (hh, kfull, vfull), None
+
+            (h, kfull, vfull), _ = ctx.lscan(
+                body_carry, (h, cache["k"], cache["v"]),
+                (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+            cache = dict(cache, k=kfull, v=vfull)
+        else:
+            h, (kc, vc) = ctx.lscan(body, h, (params["layers"], cache["k"],
+                                              cache["v"]))
+            cache = dict(cache, k=kc, v=vc)
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = unembed(cfg, params, h)[:, 0]
+    return logits, cache

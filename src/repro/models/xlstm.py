@@ -1,0 +1,372 @@
+"""xLSTM family: mLSTM blocks (chunkwise-parallel) + sLSTM blocks (sequential).
+
+48 blocks = 6 scanned groups of (7 mLSTM + 1 sLSTM) for xlstm-1.3b
+(slstm_every=8). The mLSTM matrix-memory recurrence is computed chunkwise
+(linear-attention form): intra-chunk quadratic with decay weights, inter-chunk
+via the carried (C, n) state — O(S·c·d) instead of O(S·d²) materialization.
+
+Numerics note (DESIGN.md): input-gate logits are clipped to [-10, 10] instead
+of carrying the xLSTM max-stabilizer through the chunkwise path; forget gates
+are sigmoid (log f <= 0) so no exponent can overflow. The sLSTM path keeps the
+exact max-stabilizer (it is cheap there).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models.common import spec
+from repro.models.rglru import causal_conv
+
+_CHUNK = 256
+_ILOG_CLIP = 10.0
+
+
+def _dims(cfg: ModelConfig):
+    D = cfg.d_model
+    Di = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    dh = Di // H
+    Fs = ((4 * D // 3) // 128) * 128      # sLSTM post-FFN hidden
+    return D, Di, H, dh, Fs
+
+
+# ----------------------------------------------------------------------
+# specs
+# ----------------------------------------------------------------------
+
+def _mlstm_specs(cfg: ModelConfig):
+    D, Di, H, dh, _ = _dims(cfg)
+    cw = cfg.conv_width
+    return {
+        "norm": L.norm_specs(cfg),
+        "w_up": spec((D, Di), ("embed", "mlstm_v")),
+        "w_z": spec((D, Di), ("embed", "mlstm_v")),
+        "conv_w": spec((cw, Di), ("conv", "mlstm_v"), fan_in_axes=(0,)),
+        "conv_b": spec((Di,), ("mlstm_v",), init="zeros"),
+        "wq": spec((H, dh, dh), ("heads", "head_in", "mlstm_vh"), fan_in_axes=(1,)),
+        "wk": spec((H, dh, dh), ("heads", "head_in", "mlstm_vh"), fan_in_axes=(1,)),
+        "wv": spec((H, dh, dh), ("heads", "head_in", "mlstm_vh"), fan_in_axes=(1,)),
+        "w_i": spec((Di, H), ("mlstm_v", "heads")),
+        "b_i": spec((H,), ("heads",), init="zeros"),
+        "w_f": spec((Di, H), ("mlstm_v", "heads")),
+        "b_f": spec((H,), ("heads",), init="ones"),
+        "gn": spec((Di,), ("mlstm_v",), init="ones"),
+        "w_down": spec((Di, D), ("mlstm_v", "embed")),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig):
+    D, _, _, _, Fs = _dims(cfg)
+    H = cfg.slstm_heads
+    dh = D // H
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = spec((D, D), ("embed", "slstm_d"))
+        gates[f"r_{g}"] = spec((H, dh, dh), ("heads", "head_in", "slstm_dh"),
+                               fan_in_axes=(1,))
+        gates[f"b_{g}"] = spec((D,), ("slstm_d",), init="zeros")
+    return {
+        "norm": L.norm_specs(cfg),
+        **gates,
+        "ffn_norm": L.norm_specs(cfg),
+        "w_up": spec((D, Fs), ("embed", "ffn")),
+        "w_dn": spec((Fs, D), ("ffn", "embed")),
+    }
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: s._replace(shape=(n,) + s.shape, axes=("layers",) + s.axes,
+                             fan_in_axes=tuple(a + 1 for a in s.fan_in_axes)),
+        tree,
+        is_leaf=lambda x: hasattr(x, "axes") and not isinstance(x, dict),
+    )
+
+
+def _group_counts(cfg: ModelConfig):
+    per = cfg.slstm_every
+    assert cfg.n_layers % per == 0, "n_layers must divide into slstm groups"
+    return cfg.n_layers // per, per - 1   # (groups, mlstm per group)
+
+
+def param_specs(cfg: ModelConfig):
+    G, n_m = _group_counts(cfg)
+    group = {"mlstm": _stack(_mlstm_specs(cfg), n_m), "slstm": _slstm_specs(cfg)}
+    return {
+        "embed": {"tok": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              fan_in_axes=())},
+        "groups": _stack(group, G),
+        "final_norm": L.norm_specs(cfg),
+        "lm_head": spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def _mh_rms(x, scale):
+    """Per-head RMS norm: x (B,S,H,dh), scale (H*dh,)."""
+    B, S, H, dh = x.shape
+    y = L.rms_norm(x.reshape(B, S, H, dh).astype(jnp.float32),
+                   jnp.ones((dh,), jnp.float32))
+    return (y.reshape(B, S, H * dh) * scale).astype(jnp.bfloat16)
+
+
+def mlstm_chunkwise(q, k, v, ilog, flog, state=None, chunk=_CHUNK):
+    """q,k,v (B,S,H,dh); ilog/flog (B,S,H) fp32 (flog <= 0).
+
+    state: {'C': (B,H,dh,dh) f32, 'n': (B,H,dh) f32} or None.
+    Returns (h (B,S,H,dh) f32, new_state).
+    """
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    scale = 1.0 / math.sqrt(dh)
+    from repro.distributed import ctx as _ctx
+    cdt = jnp.bfloat16 if _ctx.perf().mlstm_bf16 else jnp.float32
+    qf = (q.astype(cdt) * jnp.asarray(scale, cdt)).reshape(B, nc, c, H, dh)
+    kf = k.astype(cdt).reshape(B, nc, c, H, dh)
+    vf = v.astype(cdt).reshape(B, nc, c, H, dh)
+    il = ilog.reshape(B, nc, c, H)
+    fl = flog.reshape(B, nc, c, H)
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32) if state is None else state["C"]
+    n0 = jnp.zeros((B, H, dh), jnp.float32) if state is None else state["n"]
+
+    def body(carry, xs):
+        C, n = carry
+        qc, kc, vc, ic, fc = xs          # (B,c,H,dh), gates (B,c,H)
+        cum = jnp.cumsum(fc, axis=1)                        # inclusive logsum f
+        # inter-chunk: h_t += exp(cum_t) * q_t C ; n_t += exp(cum_t) * n
+        dec_t = jnp.exp(cum)                                # (B,c,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qc.astype(jnp.float32),
+                             C) * dec_t[..., None]
+        n_inter = n[:, None] * dec_t[..., None]
+        # intra-chunk decay: w_tj = exp(cum_t - cum_j + il_j), j <= t
+        g = ic - cum                                        # (B,c,H)
+        wmat = jnp.exp(cum[:, :, None] + g[:, None, :])     # (B,t,j,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        wmat = jnp.where(tri[None, :, :, None], wmat, 0.0)
+        wmat_c = wmat.astype(qc.dtype)
+        s = jnp.einsum("bthd,bjhd->btjh", qc, kc,
+                       preferred_element_type=jnp.float32) * wmat
+        h_intra = jnp.einsum("btjh,bjhd->bthd", s.astype(qc.dtype), vc,
+                             preferred_element_type=jnp.float32)
+        n_intra = jnp.einsum("btjh,bjhd->bthd", wmat_c, kc,
+                             preferred_element_type=jnp.float32)
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", qc.astype(jnp.float32),
+                                 n_inter + n_intra))
+        h = (h_inter + h_intra) / jnp.maximum(den, 1.0)[..., None]
+        # state update
+        last = cum[:, -1]                                   # (B,H)
+        wj = jnp.exp(last[:, None] + g)                     # (B,c,H)
+        C_new = C * jnp.exp(last)[..., None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", wj.astype(qc.dtype), kc, vc,
+            preferred_element_type=jnp.float32)
+        n_new = n * jnp.exp(last)[..., None] + jnp.einsum(
+            "bjh,bjhd->bhd", wj.astype(qc.dtype), kc,
+            preferred_element_type=jnp.float32)
+        return (C_new, n_new), h
+
+    (C, n), h = jax.lax.scan(
+        body, (C0, n0),
+        (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+         vf.transpose(1, 0, 2, 3, 4), il.transpose(1, 0, 2, 3),
+         fl.transpose(1, 0, 2, 3)))
+    h = h.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h, {"C": C, "n": n}
+
+
+def mlstm_step(q, k, v, ilog, flog, state):
+    """Single decode step. q,k,v (B,H,dh); gates (B,H) fp32."""
+    f = jnp.exp(flog)[..., None]
+    i = jnp.exp(ilog)[..., None]
+    C = state["C"] * f[..., None] + i[..., None] * (k[..., :, None] * v[..., None, :])
+    n = state["n"] * f + i * k
+    dh = q.shape[-1]
+    qs = q * (1.0 / math.sqrt(dh))
+    h = jnp.einsum("bhd,bhde->bhe", qs, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n))
+    h = h / jnp.maximum(den, 1.0)[..., None]
+    return h, {"C": C, "n": n}
+
+
+def mlstm_block(cfg, p, x, state=None):
+    """x (B,S,D). state {'C','n','conv'} or None. Returns (y, new_state)."""
+    B, S, D = x.shape
+    _, Di, H, dh, _ = _dims(cfg)
+    h = L.apply_norm(cfg, p["norm"], x)
+    u = h @ p["w_up"]                                        # (B,S,Di)
+    z = h @ p["w_z"]
+    conv_state = state["conv"] if state is not None else None
+    cpre, new_conv = causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    cact = jax.nn.silu(cpre)
+    ch = cact.reshape(B, S, H, dh)
+    uh = u.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", ch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", ch, p["wk"])
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"])
+    ilog = jnp.clip((cact @ p["w_i"] + p["b_i"]).astype(jnp.float32),
+                    -_ILOG_CLIP, _ILOG_CLIP)
+    flog = jax.nn.log_sigmoid((cact @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+
+    if state is None or S > 1:
+        st = None if state is None else {"C": state["C"], "n": state["n"]}
+        hs, new_st = mlstm_chunkwise(q, k, v, ilog, flog, st)
+    else:
+        hs, new_st = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ilog[:, 0], flog[:, 0],
+                                {"C": state["C"], "n": state["n"]})
+        hs = hs[:, None]
+    hn = _mh_rms(hs, p["gn"])                                # (B,S,Di)
+    out = (hn * jax.nn.silu(z)) @ p["w_down"]
+    new_state = {"C": new_st["C"], "n": new_st["n"], "conv": new_conv}
+    return x + out, new_state
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+
+def _slstm_rec(p, h_prev, x_t):
+    """One recurrent matmul bundle: x_t (B,D), h_prev (B,D)."""
+    H = p["r_z"].shape[0]
+    B, D = x_t.shape
+    dh = D // H
+    hh = h_prev.reshape(B, H, dh)
+    outs = {}
+    for g in ("z", "i", "f", "o"):
+        rec = jnp.einsum("bhd,hde->bhe", hh.astype(jnp.bfloat16), p[f"r_{g}"])
+        outs[g] = (x_t @ p[f"w_{g}"] + rec.reshape(B, D) + p[f"b_{g}"]).astype(
+            jnp.float32)
+    return outs
+
+
+def slstm_apply(cfg, p, x, state=None):
+    """Sequential sLSTM with exact max-stabilizer. x (B,S,D)."""
+    B, S, D = x.shape
+    xn = L.apply_norm(cfg, p["norm"], x)
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+    def step(st, x_t):
+        o = _slstm_rec(p, st["h"], x_t)
+        zt = jnp.tanh(o["z"])
+        logi = jnp.clip(o["i"], -_ILOG_CLIP, _ILOG_CLIP)
+        logf = jax.nn.log_sigmoid(o["f"])
+        m_new = jnp.maximum(logf + st["m"], logi)
+        i_s = jnp.exp(logi - m_new)
+        f_s = jnp.exp(logf + st["m"] - m_new)
+        c = f_s * st["c"] + i_s * zt
+        n = f_s * st["n"] + i_s
+        h = jax.nn.sigmoid(o["o"]) * c / jnp.maximum(n, 1e-6)
+        ns = {"h": h, "c": c, "n": n, "m": m_new}
+        return ns, h
+
+    new_state, hs = jax.lax.scan(step, state, xn.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = x + y
+    hn = L.apply_norm(cfg, p["ffn_norm"], out)
+    out = out + (jax.nn.gelu(hn @ p["w_up"], approximate=True) @ p["w_dn"])
+    return out, new_state
+
+
+# ----------------------------------------------------------------------
+# model API
+# ----------------------------------------------------------------------
+
+def _take(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _group_apply(cfg, gp, x, states=None):
+    G_m = gp["mlstm"]["w_i"].shape[0]
+    new_m = []
+    for i in range(G_m):
+        st = None if states is None else _take(states["mlstm"], i)
+        x, ns = mlstm_block(cfg, _take(gp["mlstm"], i), x, st)
+        new_m.append(ns)
+    s_st = None if states is None else states["slstm"]
+    x, s_new = slstm_apply(cfg, gp["slstm"], x, s_st)
+    m_states = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+    return x, {"mlstm": m_states, "slstm": s_new}
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=False, last_only=False,
+            return_states=False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"]["tok"][tokens]
+
+    def body(hh, gp):
+        hh = ctx.constrain(hh)
+        y, st = _group_apply(cfg, gp, hh)
+        return y, st
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, states = ctx.lscan(body, h, params["groups"])
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if last_only:
+        h = h[:, -1:]
+    logits = h @ params["lm_head"]
+    if return_states:
+        return logits, states
+    return logits
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    G, n_m = _group_counts(cfg)
+    D, Di, H, dh, _ = _dims(cfg)
+    cw = cfg.conv_width
+    f32 = jnp.float32
+    return {
+        "mlstm": {
+            "C": jax.ShapeDtypeStruct((G, n_m, batch, H, dh, dh), f32),
+            "n": jax.ShapeDtypeStruct((G, n_m, batch, H, dh), f32),
+            "conv": jax.ShapeDtypeStruct((G, n_m, batch, cw - 1, Di), jnp.bfloat16),
+        },
+        "slstm": {
+            k: jax.ShapeDtypeStruct((G, batch, D), f32)
+            for k in ("h", "c", "n", "m")
+        },
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    c = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                     cache_spec(cfg, batch, max_len))
+    c["slstm"]["n"] = c["slstm"]["n"] + 1e-6
+    return c
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int):
+    B, S = tokens.shape
+    logits, states = forward(cfg, params, {"tokens": tokens}, last_only=True,
+                             return_states=True)
+    return logits[:, -1], states
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    B = tokens.shape[0]
+    h = params["embed"]["tok"][tokens]
+
+    def body(hh, xs):
+        gp, st = xs
+        y, ns = _group_apply(cfg, gp, hh, st)
+        return y, ns
+
+    h, states = ctx.lscan(body, h, (params["groups"], cache))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = (h @ params["lm_head"])[:, 0]
+    return logits, states

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (
+    AdamWConfig, adamw_update, init_opt_state, lr_schedule, global_norm,
+)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule",
+           "global_norm"]

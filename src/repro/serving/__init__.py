@@ -1,0 +1,7 @@
+from repro.serving.engine import ServingEngine, Request, ServeStats, CompiledExpertRunner
+from repro.serving.speculative import SpeculativeDecoder, SpecStats, extend_step
+from repro.serving.kvcache import PagedKVCache, PagedStats
+
+__all__ = ["ServingEngine", "Request", "ServeStats", "CompiledExpertRunner",
+           "SpeculativeDecoder", "SpecStats", "extend_step",
+           "PagedKVCache", "PagedStats"]

@@ -1,0 +1,165 @@
+"""Serving engine: batched request scheduling over the CoE.
+
+The paper's deployment (§V-B, §VI-C): requests arrive, the router assigns an
+expert, prompts are grouped per expert, the switching engine activates
+experts through the HBM LRU cache with next-expert prefetch, and each group
+runs prefill + decode. This engine adds the production pieces around the
+CoE core: a request queue, jit-compiled per-(config, batch-shape) step
+functions (compiled once, reused across experts — all experts share the
+backbone config, the paper's §II setup), padding to batch buckets, timeout
+re-dispatch of straggling groups, and per-request latency accounting.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.coe import CompositionOfExperts
+from repro.models import get_model
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (S,)
+    max_new_tokens: int
+    arrival_s: float = field(default_factory=time.perf_counter)
+    done_s: Optional[float] = None
+    output: Optional[np.ndarray] = None
+    expert: Optional[str] = None
+
+
+class CompiledExpertRunner:
+    """Caches jit-compiled prefill/decode for a (config, batch, seqlen)
+    bucket — compiled once, shared by every expert with that backbone."""
+
+    def __init__(self, cfg: ModelConfig, max_len: int):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.max_len = max_len
+        self._prefill = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos),
+            donate_argnums=(1,))
+
+    def prefill(self, params, tokens):
+        key = tokens.shape
+        if key not in self._prefill:
+            self._prefill[key] = jax.jit(
+                lambda p, t: self.model.prefill(p, {"tokens": t}, self.max_len))
+        return self._prefill[key](params, tokens)
+
+    def decode(self, params, cache, tokens, pos):
+        return self._decode(params, cache, tokens, pos)
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    tokens_out: int = 0
+    switch_s: float = 0.0
+    exec_s: float = 0.0
+    route_s: float = 0.0
+    retries: int = 0
+
+    @property
+    def tokens_per_second(self):
+        t = self.switch_s + self.exec_s
+        return self.tokens_out / t if t else 0.0
+
+
+class ServingEngine:
+    def __init__(self, coe: CompositionOfExperts, cfg: ModelConfig,
+                 max_len: int = 4096, batch_buckets=(1, 4, 8),
+                 group_timeout_s: float = 120.0):
+        self.coe = coe
+        self.runner = CompiledExpertRunner(cfg, max_len)
+        self.queue: List[Request] = []
+        self.stats = ServeStats()
+        self.buckets = tuple(sorted(batch_buckets))
+        self.group_timeout_s = group_timeout_s
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def step(self) -> List[Request]:
+        """Serve everything currently queued; returns completed requests."""
+        if not self.queue:
+            return []
+        reqs, self.queue = self.queue, []
+        S = max(len(r.tokens) for r in reqs)
+        toks = np.zeros((len(reqs), S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.tokens):] = r.tokens     # left-pad
+
+        t0 = time.perf_counter()
+        eidx = self.coe.route(toks) % len(self.coe.expert_names())
+        self.stats.route_s += time.perf_counter() - t0
+        names = self.coe.expert_names()
+
+        groups: Dict[int, List[int]] = {}
+        for i, e in enumerate(eidx):
+            groups.setdefault(int(e), []).append(i)
+
+        done: List[Request] = []
+        glist = sorted(groups.items())
+        for gi, (e, rows) in enumerate(glist):
+            name = names[e]
+            t0 = time.perf_counter()
+            params = self.coe.cache.activate(name)
+            self.stats.switch_s += time.perf_counter() - t0
+            if gi + 1 < len(glist):
+                self.coe.cache.prefetch(names[glist[gi + 1][0]])
+
+            n_new = max(reqs[i].max_new_tokens for i in rows)
+            bucket = self._bucket(len(rows))
+            sub = np.zeros((bucket, S), np.int32)
+            sub[: len(rows)] = toks[rows]
+
+            t0 = time.perf_counter()
+            attempts = 0
+            while True:
+                attempts += 1
+                try:
+                    out = self._run_group(params, jnp.asarray(sub), S, n_new)
+                    break
+                except Exception:
+                    # straggler / transient failure mitigation: re-dispatch
+                    # once (on real clusters: to a spare replica)
+                    self.stats.retries += 1
+                    if attempts >= 2:
+                        raise
+            self.stats.exec_s += time.perf_counter() - t0
+
+            for j, i in enumerate(rows):
+                r = reqs[i]
+                r.output = out[j, : r.max_new_tokens]
+                r.expert = name
+                r.done_s = time.perf_counter()
+                self.stats.tokens_out += int(r.max_new_tokens)
+                done.append(r)
+        self.stats.requests += len(done)
+        return done
+
+    def _run_group(self, params, tokens, S, n_new) -> np.ndarray:
+        last, cache = self.runner.prefill(params, tokens)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        outs = [tok]
+        for t in range(n_new - 1):
+            lg, cache = self.runner.decode(params, cache, tok[:, None],
+                                           jnp.int32(S + t))
+            tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            outs.append(tok)
+        return np.asarray(jax.device_get(jnp.stack(outs, axis=1)))

@@ -1,0 +1,103 @@
+"""Paged KV-cache pool for concurrent CoE serving.
+
+The HBM tier holds three competing populations: expert weights (LRU cache,
+core/switching.py), the router, and per-request KV caches. A paged pool
+(vLLM-style block tables) bounds the KV population: requests allocate
+fixed-size blocks on demand, free them on completion, and fragmentation is
+impossible by construction. The pool's byte budget plugs into the same
+three-tier accounting the expert cache uses, so the CoE runtime can trade
+resident experts against concurrent requests explicitly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedStats:
+    allocs: int = 0
+    frees: int = 0
+    blocks_in_use: int = 0
+    peak_blocks: int = 0
+
+
+class PagedKVCache:
+    """Block-paged K/V pool. Layout: (n_blocks, block, kv_heads, head_dim)."""
+
+    def __init__(self, n_blocks: int, block_size: int, n_layers: int,
+                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.n_blocks = n_blocks
+        self.block = block_size
+        self.k = jnp.zeros((n_layers, n_blocks, block_size, kv_heads, head_dim),
+                           dtype)
+        self.v = jnp.zeros_like(self.k)
+        self._free: List[int] = list(range(n_blocks))[::-1]
+        self._tables: Dict[int, List[int]] = {}
+        self._lengths: Dict[int, int] = {}
+        self.stats = PagedStats()
+
+    # -- bookkeeping -------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def bytes_in_use(self) -> int:
+        per_block = int(np.prod(self.k.shape[2:])) * self.k.dtype.itemsize * 2
+        return self.stats.blocks_in_use * per_block * self.k.shape[0]
+
+    def table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def length(self, rid: int) -> int:
+        return self._lengths[rid]
+
+    # -- allocation ---------------------------------------------------------
+    def open(self, rid: int):
+        if rid in self._tables:
+            raise KeyError(f"request {rid} already open")
+        self._tables[rid] = []
+        self._lengths[rid] = 0
+
+    def _ensure(self, rid: int, n_tokens: int):
+        need_blocks = -(-(self._lengths[rid] + n_tokens) // self.block)
+        while len(self._tables[rid]) < need_blocks:
+            if not self._free:
+                raise MemoryError("KV pool exhausted")
+            self._tables[rid].append(self._free.pop())
+            self.stats.allocs += 1
+            self.stats.blocks_in_use += 1
+            self.stats.peak_blocks = max(self.stats.peak_blocks,
+                                         self.stats.blocks_in_use)
+
+    def append(self, rid: int, k_new, v_new):
+        """k_new/v_new (L, n_tokens, kv_heads, head_dim) for one request."""
+        L, n, H, dh = k_new.shape
+        self._ensure(rid, n)
+        start = self._lengths[rid]
+        for i in range(n):                       # token-granular placement
+            tok = start + i
+            blk = self._tables[rid][tok // self.block]
+            off = tok % self.block
+            self.k = self.k.at[:, blk, off].set(k_new[:, i])
+            self.v = self.v.at[:, blk, off].set(v_new[:, i])
+        self._lengths[rid] = start + n
+
+    def gather(self, rid: int):
+        """Contiguous (L, len, kv_heads, head_dim) view for attention."""
+        tbl = jnp.asarray(self._tables[rid], jnp.int32)
+        k = self.k[:, tbl].reshape(self.k.shape[0], -1, *self.k.shape[3:])
+        v = self.v[:, tbl].reshape(self.v.shape[0], -1, *self.v.shape[3:])
+        n = self._lengths[rid]
+        return k[:, :n], v[:, :n]
+
+    def free(self, rid: int):
+        for blk in self._tables.pop(rid):
+            self._free.append(blk)
+            self.stats.frees += 1
+            self.stats.blocks_in_use -= 1
+        del self._lengths[rid]

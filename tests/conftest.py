@@ -1,0 +1,15 @@
+import os
+
+# Keep tests on ONE device — only the dry-run uses 512 placeholder devices
+# (tests that need fake multi-device spawn subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,324 @@
+"""Substrate tests: data pipeline determinism/resume, checkpoint atomic
+roundtrip + elastic restore, optimizer, serving engine, layers properties."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLM, make_source
+from repro.models import get_model, layers as L
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+
+
+# ---------------------------------------------------------------- data
+def test_data_resume_exact():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4, seed=7)
+    src = SyntheticLM(cfg)
+    a = src.batch_at(123)
+    b = src.batch_at(123)
+    assert (a["tokens"] == b["tokens"]).all()
+    c = src.batch_at(124)
+    assert not (a["tokens"] == c["tokens"]).all()
+    # targets are next-token shifted
+    full = SyntheticLM(cfg)
+    d = full.batch_at(5)
+    assert (d["tokens"][:, 1:] == d["targets"][:, :-1]).all()
+
+
+def test_data_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+    src = SyntheticLM(cfg)
+    full = src.batch_at(0)["tokens"]
+    parts = [src.shard_at(0, i, 4)["tokens"] for i in range(4)]
+    assert (np.concatenate(parts) == full).all()
+
+
+def test_memmap_source(tmp_path):
+    toks = np.arange(10000, dtype=np.int32)
+    path = tmp_path / "corpus.bin"
+    toks.tofile(path)
+    cfg = DataConfig(vocab_size=10000, seq_len=16, global_batch=4,
+                     corpus_path=str(path))
+    src = make_source(cfg)
+    b = src.batch_at(3)
+    assert b["tokens"].shape == (4, 16)
+    assert (b["tokens"][:, 1:] == b["targets"][:, :-1]).all()
+
+
+# ---------------------------------------------------------------- ckpt
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"step": jnp.int32(5)}}
+    for s in (1, 2, 3):
+        mgr.save(s, state)
+    assert mgr.latest_step() == 3
+    assert len(list(tmp_path.glob("step-*"))) == 2   # retention
+    restored, manifest = mgr.restore(3, state)
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  state["params"]["w"])
+
+
+def test_checkpoint_elastic_restore_different_sharding(tmp_path):
+    """Save unsharded, restore onto an explicit (1,1) mesh sharding —
+    the mesh-elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import single_device_mesh
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.ones((4, 4))}
+    mgr.save(1, state)
+    mesh = single_device_mesh()
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    restored, _ = mgr.restore(1, state, sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A stale staging dir never corrupts restore."""
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / ".tmp-9-999").mkdir()
+    state = {"w": jnp.zeros(3)}
+    mgr.save(1, state)
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------- optim
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, decay_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(params)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 50, 100, 200)]
+    assert lrs[0] < lrs[2]                   # warmup rises
+    assert lrs[2] >= lrs[3] >= lrs[4]        # cosine decays
+    assert lrs[-1] >= 0.1 - 1e-6             # floor
+
+
+# ---------------------------------------------------------------- layers
+@given(st.integers(2, 6), st.integers(2, 64))
+@settings(max_examples=20, deadline=None)
+def test_rmsnorm_scale_invariance(b, d):
+    x = jnp.asarray(np.random.RandomState(b * d).randn(b, d), jnp.float32)
+    y1 = L.rms_norm(x, jnp.ones(d))
+    y2 = L.rms_norm(3.0 * x, jnp.ones(d))
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+@given(st.integers(1, 3), st.sampled_from([16, 32, 64]))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm_and_relative_phase(b, dh):
+    cfg = dataclasses.replace(get_config("granite-8b"), head_dim=dh)
+    x = jnp.asarray(np.random.RandomState(dh).randn(b, 4, 2, dh), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (b, 4))
+    y = L.apply_rope(cfg, x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+        rtol=1e-4, atol=1e-4)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jnp.asarray(np.random.RandomState(1).randn(1, 1, 1, dh), jnp.float32)
+    k = jnp.asarray(np.random.RandomState(2).randn(1, 1, 1, dh), jnp.float32)
+    def dot_at(m, n):
+        qm = L.apply_rope(cfg, q, jnp.full((1, 1), m))
+        kn = L.apply_rope(cfg, k, jnp.full((1, 1), n))
+        return float(jnp.sum(qm * kn))
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+
+
+def test_block_attention_equals_naive_long():
+    rng = jax.random.PRNGKey(3)
+    ks = jax.random.split(rng, 3)
+    B, S, Hq, Hkv, dh = 1, 512, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, S, Hq, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    for window in (0, 100):
+        a = L.block_attention(q, k, v, window=window, block=128)
+        b = L.naive_attention(q, k, v, window=window)
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-4)
+
+
+@given(st.integers(2, 5), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_moe_routing_weights_sum(b, s):
+    """Top-k combine weights (after renorm) sum to ~1 per token (mixtral)."""
+    cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b")),
+                              capacity_factor=16.0)
+    x = jnp.asarray(np.random.RandomState(b).randn(b, s, cfg.d_model),
+                    jnp.float32)
+    from repro.models.layers import moe_specs
+    from repro.models.common import init_params
+    p = init_params(jax.random.PRNGKey(0), moe_specs(cfg))
+    out = L.moe_apply(cfg, p, x.astype(jnp.bfloat16))
+    assert out.shape == x.shape
+    assert not bool(jnp.isnan(out.astype(jnp.float32)).any())
+
+
+def test_mlstm_chunkwise_matches_step():
+    """Chunkwise-parallel mLSTM == sequential step recurrence."""
+    from repro.models.xlstm import mlstm_chunkwise, mlstm_step
+    rng = jax.random.PRNGKey(0)
+    B, S, H, dh = 2, 32, 2, 16
+    ks = jax.random.split(rng, 5)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    il = jax.random.normal(ks[3], (B, S, H)) * 0.5
+    fl = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)))
+    hc, st_c = mlstm_chunkwise(q, k, v, il, fl, chunk=8)
+    state = {"C": jnp.zeros((B, H, dh, dh)), "n": jnp.zeros((B, H, dh))}
+    outs = []
+    for t in range(S):
+        h, state = mlstm_step(q[:, t], k[:, t], v[:, t], il[:, t], fl[:, t],
+                              state)
+        outs.append(h)
+    hs = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(hc, hs, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st_c["C"], state["C"], atol=1e-4, rtol=1e-3)
+
+
+def test_rglru_scan_matches_step():
+    from repro.models.rglru import rec_block, _rec_specs
+    from repro.models.common import init_params
+    cfg = dataclasses.replace(reduced(get_config("recurrentgemma-9b")))
+    p = init_params(jax.random.PRNGKey(0), _rec_specs(cfg))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.bfloat16)
+    y_par, st_par = rec_block(cfg, p, x)                # associative scan
+    st = {"h": jnp.zeros((B, cfg.d_rnn), jnp.float32),
+          "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.d_rnn), jnp.bfloat16)}
+    ys = []
+    for t in range(S):
+        y, st = rec_block(cfg, p, x[:, t:t + 1], st)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_par.astype(np.float32),
+                               y_seq.astype(np.float32), atol=3e-2, rtol=3e-2)
+    np.testing.assert_allclose(st_par["h"], st["h"], atol=1e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------- serving
+def test_serving_engine_end_to_end(rng):
+    from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+    from repro.serving import Request, ServingEngine
+    cfg = reduced(get_config("samba-coe-expert-7b"))
+    m = get_model(cfg)
+    experts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+               for i in range(2)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+    coe = CompositionOfExperts(HashRouter(2), None, 3 * nbytes)
+    for i, h in enumerate(experts):
+        coe.register(ExpertHandle(f"e{i}", cfg, h))
+    eng = ServingEngine(coe, cfg, max_len=24)
+    rs = np.random.RandomState(0)
+    for i in range(5):
+        eng.submit(Request(rid=i, tokens=rs.randint(
+            0, cfg.vocab_size, (16,)).astype(np.int32), max_new_tokens=4))
+    done = eng.step()
+    assert len(done) == 5
+    assert all(r.output.shape == (4,) for r in done)
+    assert eng.stats.tokens_out == 20
+    assert eng.stats.exec_s > 0
+
+
+def test_grad_accumulation_matches_full_batch(rng):
+    """accum_steps=2 must produce (numerically close) identical updates to
+    the full-batch step — f32 accumulation, mean-reduced loss."""
+    from repro.launch.mesh import single_device_mesh
+    from repro.distributed import stepfn
+    from repro.optim import init_opt_state
+    cfg = reduced(get_config("granite-8b"))
+    mesh = single_device_mesh()
+    with mesh:
+        m = get_model(cfg)
+        params = m.init(rng)
+        toks = jax.random.randint(jax.random.fold_in(rng, 1), (4, 33), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        f1, sh, _ = stepfn.make_train_step(cfg, mesh)
+        f2, _, _ = stepfn.make_train_step(cfg, mesh, accum_steps=2)
+        # independent buffer copies: the train step donates its input state
+        host = jax.tree.map(lambda x: np.asarray(x), params)
+        s0 = jax.device_put({"params": jax.tree.map(jnp.asarray, host),
+                             "opt": init_opt_state(params)}, sh)
+        s1 = jax.device_put({"params": jax.tree.map(jnp.asarray, host),
+                             "opt": init_opt_state(params)}, sh)
+        s0, m0 = f1(s0, batch)
+        s1, m1 = f2(s1, batch)
+    assert abs(float(m0["loss"]) - float(m1["loss"])) < 0.05
+    w0 = jax.tree.leaves(s0["params"])[0].astype(jnp.float32)
+    w1 = jax.tree.leaves(s1["params"])[0].astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(w0 - w1))) < 2e-2
+
+
+def test_async_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.arange(8.0), "s": jnp.int32(3)}
+    mgr.save_async(1, state)
+    mgr.wait()
+    restored, _ = mgr.restore(1, state)
+    np.testing.assert_array_equal(restored["w"], state["w"])
+
+
+# ---------------------------------------------------------------- paged kv
+def test_paged_kv_cache_roundtrip_and_reuse(rng):
+    from repro.serving.kvcache import PagedKVCache
+    L, H, dh, blk = 2, 2, 8, 4
+    pool = PagedKVCache(n_blocks=6, block_size=blk, n_layers=L,
+                        kv_heads=H, head_dim=dh, dtype=jnp.float32)
+    ks = jax.random.split(rng, 4)
+    ka = jax.random.normal(ks[0], (L, 6, H, dh))
+    va = jax.random.normal(ks[1], (L, 6, H, dh))
+    kb = jax.random.normal(ks[2], (L, 9, H, dh))
+    vb = jax.random.normal(ks[3], (L, 9, H, dh))
+    pool.open(1); pool.open(2)
+    # interleaved appends across requests
+    pool.append(1, ka[:, :4], va[:, :4])
+    pool.append(2, kb[:, :5], vb[:, :5])
+    pool.append(1, ka[:, 4:], va[:, 4:])
+    pool.append(2, kb[:, 5:], vb[:, 5:])
+    k1, v1 = pool.gather(1)
+    k2, v2 = pool.gather(2)
+    np.testing.assert_allclose(k1, ka, atol=0)
+    np.testing.assert_allclose(v2, vb, atol=0)
+    assert pool.stats.blocks_in_use == 2 + 3
+    # free and reuse without fragmentation
+    pool.free(1)
+    pool.open(3)
+    pool.append(3, kb[:, :8], vb[:, :8])     # needs 2 blocks, reuses freed
+    k3, _ = pool.gather(3)
+    np.testing.assert_allclose(k3, kb[:, :8], atol=0)
+    assert pool.stats.blocks_in_use == 3 + 2
+
+
+def test_paged_kv_cache_exhaustion(rng):
+    from repro.serving.kvcache import PagedKVCache
+    pool = PagedKVCache(n_blocks=2, block_size=2, n_layers=1, kv_heads=1,
+                        head_dim=4, dtype=jnp.float32)
+    pool.open(1)
+    k = jnp.ones((1, 4, 1, 4))
+    pool.append(1, k, k)                      # uses both blocks
+    pool.open(2)
+    import pytest as _pt
+    with _pt.raises(MemoryError):
+        pool.append(2, k[:, :1], k[:, :1])
