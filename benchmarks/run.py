@@ -267,16 +267,17 @@ def bench_fig1_switching_measured():
     coe = CompositionOfExperts(HashRouter(4), None, int(2.5 * nbytes))
     for i, h in enumerate(experts):
         coe.register(ExpertHandle(f"e{i}", cfg, h))
-    eng = ServingEngine(coe, cfg, max_len=40)
+    eng = ServingEngine(coe, cfg, max_len=48, n_slots=8, block_size=8)
     rs = np.random.RandomState(0)
     for i in range(8):
         eng.submit(Request(rid=i, tokens=rs.randint(
             0, cfg.vocab_size, (32,)).astype(np.int32), max_new_tokens=8))
-    eng.step()
+    eng.drain()
     st = eng.stats
-    total = st.switch_s + st.exec_s + st.route_s
+    exec_s = st.exec_s + st.prefill_s
+    total = st.switch_s + exec_s + st.route_s
     emit("fig1_measured_breakdown", total * 1e6,
-         f"switch%={100*st.switch_s/total:.1f},exec%={100*st.exec_s/total:.1f},"
+         f"switch%={100*st.switch_s/total:.1f},exec%={100*exec_s/total:.1f},"
          f"hits={coe.cache.stats.hits},misses={coe.cache.stats.misses}")
     bw = coe.cache.stats.bytes_copied_in / max(coe.cache.stats.switch_seconds,
                                                1e-9)
@@ -285,9 +286,125 @@ def bench_fig1_switching_measured():
 
 
 # ----------------------------------------------------------------------
+# Arrival-rate sweep: run-to-completion vs continuous batching (§VI-C)
+# ----------------------------------------------------------------------
+def bench_sweep_arrival():
+    """Offered-load sweep over the serving engine. One Poisson request trace
+    per offered rate (requests/s; ``inf`` = burst, every request queued at
+    t=0) is replayed against BOTH schedulers on the same paged KV substrate
+    and the same compiled step functions — the measured difference is pure
+    scheduling. Emits achieved tokens/s and p50/p99 request latency; the
+    final row is the continuous/run-to-completion throughput ratio at the
+    highest offered load (the paper's keep-the-chip-busy claim)."""
+    from repro.configs import get_config, reduced
+    from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+    from repro.models import get_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(get_config("samba-coe-expert-7b"))
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    n_exp = 3
+    experts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+               for i in range(n_exp)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+
+    def mk_engine(scheduler, runner=None):
+        coe = CompositionOfExperts(HashRouter(n_exp), None, int(2.5 * nbytes))
+        for i, h in enumerate(experts):
+            coe.register(ExpertHandle(f"e{i}", cfg, h))
+        return ServingEngine(coe, cfg, max_len=32, n_slots=4, block_size=8,
+                             scheduler=scheduler, runner=runner)
+
+    # one fixed trace per offered load: (arrival offset s, prompt, max_new).
+    # decode-heavy mix (short prompts, long + uneven outputs): the regime
+    # where scheduling — not prefill — decides throughput (§VI-C decode).
+    rs = np.random.RandomState(0)
+    n_req = 20
+    prompts = [rs.randint(0, cfg.vocab_size, (10,)).astype(np.int32)
+               for _ in range(n_req)]
+    new_toks = [int(rs.randint(4, 23)) for _ in range(n_req)]
+    loads = [4.0, 12.0, float("inf")]
+    repeats = 3           # wall time is noisy on shared machines: best-of-N,
+                          # schedulers alternated within each repeat
+    traces = {}
+    for lam in loads:
+        if np.isinf(lam):
+            offs = np.zeros(n_req)
+        else:
+            offs = np.cumsum(rs.exponential(1.0 / lam, n_req))
+        traces[lam] = list(zip(offs, prompts, new_toks))
+
+    def serve_trace(eng, trace):
+        pending = list(trace)
+        done = []
+        t0 = time.perf_counter()
+        rid = 0
+        while pending or eng.has_work:
+            now = time.perf_counter() - t0
+            while pending and pending[0][0] <= now:
+                off, toks, n_new = pending.pop(0)
+                r = Request(rid=rid, tokens=toks, max_new_tokens=n_new)
+                r.arrival_s = t0 + off   # offered arrival, not submit time:
+                eng.submit(r)            # queueing delay while the engine is
+                rid += 1                 # mid-step must count in latency
+            if not eng.has_work and pending:
+                time.sleep(min(pending[0][0] - now, 0.05))
+                continue
+            done.extend(eng.step())
+        return done, time.perf_counter() - t0
+
+    shared_runner = None
+    best = {}                       # (sched, lam) -> dict of the fastest run
+    for lam in loads:
+        for rep in range(repeats):
+            for sched in ("run_to_completion", "continuous"):
+                eng = mk_engine(sched, runner=shared_runner)
+                shared_runner = eng.runner    # share the compile cache
+                # warm the compile cache outside the timed window
+                eng.submit(Request(rid=10_000, tokens=np.zeros(10, np.int32),
+                                   max_new_tokens=2))
+                eng.drain()
+                eng.stats.__init__()
+                done, wall = serve_trace(eng, traces[lam])
+                lat = np.array([r.latency_s for r in done])
+                run = {"wall": wall,
+                       "tps": sum(r.max_new_tokens for r in done) / wall,
+                       "p50": np.percentile(lat, 50), "p99": np.percentile(lat, 99),
+                       "occ": eng.stats.mean_occupancy,
+                       "switches": eng.stats.switches}
+                key = (sched, lam)
+                if key not in best:
+                    best[key] = run
+                else:       # per-metric best across repeats: a repeat can win
+                    b = best[key]   # on tps while a hiccup inflates its p99
+                    b["tps"] = max(b["tps"], run["tps"])
+                    b["wall"] = min(b["wall"], run["wall"])
+                    b["p50"] = min(b["p50"], run["p50"])
+                    b["p99"] = min(b["p99"], run["p99"])
+                    b["occ"] = max(b["occ"], run["occ"])
+                    b["switches"] = min(b["switches"], run["switches"])
+    for sched in ("run_to_completion", "continuous"):
+        for lam in loads:
+            b = best[(sched, lam)]
+            label = "inf" if np.isinf(lam) else f"{lam:g}"
+            emit(f"sweep_{sched}_load_{label}", b["wall"] * 1e6,
+                 f"tokens/s={b['tps']:.1f},p50_ms={b['p50']*1e3:.0f},"
+                 f"p99_ms={b['p99']*1e3:.0f},occupancy={b['occ']:.2f},"
+                 f"switches={b['switches']},best_of={repeats}")
+    hi = loads[-1]
+    ratio = best[("continuous", hi)]["tps"] / best[("run_to_completion", hi)]["tps"]
+    emit("sweep_continuous_vs_rtc_highest_load", 0.0,
+         f"throughput_ratio={ratio:.2f}x_at_burst")
+
+
+# ----------------------------------------------------------------------
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sweep-arrival", action="store_true",
+                    help="run ONLY the offered-load serving sweep "
+                         "(run-to-completion vs continuous batching)")
     args = ap.parse_args(argv)
     benches = {
         "table1": bench_table1_intensity,
@@ -297,12 +414,19 @@ def main(argv=None) -> None:
         "fig13": bench_fig13_footprint,
         "tableIV": bench_tableIV_decode_throughput,
         "fig1": bench_fig1_switching_measured,
+        "sweep": bench_sweep_arrival,
     }
     print("name,us_per_call,derived")
-    for name, fn in benches.items():
-        if args.only and args.only != name:
-            continue
-        fn()
+    if args.sweep_arrival:
+        bench_sweep_arrival()
+    else:
+        for name, fn in benches.items():
+            if args.only:
+                if args.only != name:
+                    continue
+            elif name == "sweep":
+                continue          # heavy: opt-in via --sweep-arrival
+            fn()
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "benchmarks.csv").write_text("\n".join(ROWS) + "\n")
 

@@ -1,10 +1,15 @@
-"""End-to-end driver: serve a Composition of Experts with batched requests
-through the three-tier memory system (the paper's deployment, §V/§VI-C).
+"""End-to-end driver: serve a Composition of Experts with the
+continuous-batching engine over the paged KV pool (paper §V/§VI-C).
 
-Builds 6 experts + a router, submits a mixed batch of requests, and reports
-the Fig-1 switch/execute breakdown, LRU cache statistics, and throughput.
+Builds N experts + a router (optionally carving the HBM tier into a weight
+share and a KV share via ``--kv-reserve-experts``), replays a staggered
+request trace through the engine, and reports the Fig-1 switch/execute
+breakdown, LRU + paged-pool statistics, slot occupancy, and per-request
+latency percentiles. Pass ``--scheduler run_to_completion`` to feel the
+baseline the engine replaces.
 
     PYTHONPATH=src python examples/coe_serving.py [--n-experts 6]
+    PYTHONPATH=src python examples/coe_serving.py --scheduler run_to_completion
 """
 import argparse
 import time
@@ -22,9 +27,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-experts", type=int, default=6)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "run_to_completion"])
     ap.add_argument("--hbm-experts", type=float, default=2.5,
-                    help="HBM capacity in units of one expert (forces "
-                    "evictions when < n-experts)")
+                    help="HBM tier capacity in units of one expert "
+                    "(forces evictions when < n-experts)")
+    ap.add_argument("--kv-reserve-experts", type=float, default=0.0,
+                    help="slice of the HBM tier reserved for the paged KV "
+                    "pool, in units of one expert (0 = size the pool for "
+                    "n-slots full-length requests instead)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
@@ -39,39 +51,60 @@ def main():
         experts.append(jax.tree.map(np.asarray, p))     # host = "DDR"
     nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
 
-    coe = CompositionOfExperts(HashRouter(args.n_experts), None,
-                               hbm_capacity_bytes=int(args.hbm_experts * nbytes))
+    coe = CompositionOfExperts(
+        HashRouter(args.n_experts), None,
+        hbm_capacity_bytes=int(args.hbm_experts * nbytes),
+        kv_reserve_bytes=int(args.kv_reserve_experts * nbytes))
     domains = ["code", "math", "translate", "chat", "legal", "medical"]
     for i, host in enumerate(experts):
         coe.register(ExpertHandle(f"expert-{domains[i % len(domains)]}-{i}",
                                   cfg, host, domain=domains[i % len(domains)]))
 
-    engine = ServingEngine(coe, cfg, max_len=48)
+    engine = ServingEngine(coe, cfg, max_len=48, n_slots=args.n_slots,
+                           block_size=8, scheduler=args.scheduler)
     rs = np.random.RandomState(0)
-    for i in range(args.requests):
-        engine.submit(Request(
-            rid=i, tokens=rs.randint(0, cfg.vocab_size, (24,)).astype(np.int32),
-            max_new_tokens=8))
 
+    # staggered trace: half the requests queued up-front, the rest submitted
+    # while the engine is already decoding (continuous admission at work)
+    reqs = [Request(
+        rid=i, tokens=rs.randint(0, cfg.vocab_size, (16,)).astype(np.int32),
+        max_new_tokens=int(rs.randint(4, 13))) for i in range(args.requests)]
+    upfront, late = reqs[: args.requests // 2], reqs[args.requests // 2:]
     t0 = time.perf_counter()
-    done = engine.step()
+    for r in upfront:
+        engine.submit(r)
+    done = []
+    while engine.has_work or late:
+        if late:                     # trickle the rest in while decoding
+            engine.submit(late.pop(0))
+        done.extend(engine.step())
     wall = time.perf_counter() - t0
 
     st = engine.stats
     cs = coe.cache.stats
-    print(f"\nserved {len(done)} requests / {st.tokens_out} tokens "
-          f"in {wall:.2f}s ({st.tokens_out/wall:.1f} tok/s)")
-    total = st.switch_s + st.exec_s + st.route_s
+    ps = engine.pool.stats
+    print(f"\n[{args.scheduler}] served {st.requests} requests / "
+          f"{st.tokens_out} tokens in {wall:.2f}s "
+          f"({st.tokens_out/wall:.1f} tok/s)")
+    total = st.switch_s + st.exec_s + st.prefill_s + st.route_s
     print(f"Fig-1 breakdown: route {100*st.route_s/total:.1f}% | "
           f"switch {100*st.switch_s/total:.1f}% | "
-          f"execute {100*st.exec_s/total:.1f}%")
-    print(f"HBM cache: hits={cs.hits} misses={cs.misses} "
+          f"prefill {100*st.prefill_s/total:.1f}% | "
+          f"decode {100*st.exec_s/total:.1f}%")
+    print(f"scheduler: {st.decode_rounds} decode rounds, "
+          f"mean slot occupancy {st.mean_occupancy:.2f}, "
+          f"{st.switches} expert switches")
+    print(f"HBM weight cache: hits={cs.hits} misses={cs.misses} "
           f"evictions={cs.evictions} copied_in={cs.bytes_copied_in>>20}MiB "
           f"copyback_elided={cs.bytes_copyback_elided>>20}MiB (read-only)")
+    print(f"paged KV pool: allocs={ps.allocs} frees={ps.frees} "
+          f"peak_blocks={ps.peak_blocks} leaked={ps.blocks_in_use}")
+    lat = np.array([r.latency_s for r in done]) * 1e3
+    print(f"latency: p50={np.percentile(lat, 50):.0f}ms "
+          f"p99={np.percentile(lat, 99):.0f}ms")
     by_expert = {}
     for r in done:
-        by_expert.setdefault(r.expert, 0)
-        by_expert[r.expert] += 1
+        by_expert[r.expert] = by_expert.get(r.expert, 0) + 1
     print("requests per expert:", by_expert)
 
 

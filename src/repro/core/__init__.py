@@ -6,6 +6,7 @@ from repro.core.switching import HBMWeightCache, SwitchStats, model_switch_time
 from repro.core.memory_tiers import (
     MemoryTier, MachineTiers, MACHINES, SN40L_NODE, DGX_A100, DGX_H100,
     TPU_V5E_NODE, Symbol, allocate_static, spill_order, plan_placement,
+    HBMBudget, plan_hbm_budget,
 )
 from repro.core import bandwidth_model, fusion
 
@@ -15,5 +16,6 @@ __all__ = [
     "model_switch_time", "MemoryTier", "MachineTiers", "MACHINES",
     "SN40L_NODE", "DGX_A100", "DGX_H100", "TPU_V5E_NODE",
     "Symbol", "allocate_static", "spill_order", "plan_placement",
+    "HBMBudget", "plan_hbm_budget",
     "bandwidth_model", "fusion",
 ]

@@ -12,6 +12,7 @@ and the switch/execute latency breakdown of Fig 1.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -21,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.memory_tiers import HBMBudget
 from repro.core.switching import HBMWeightCache, tree_bytes
 from repro.models import get_model
 from repro.models.common import param_bytes
@@ -35,8 +37,10 @@ class ExpertHandle:
     host_params: Any                  # host-side pytree ("DDR")
     domain: str = "general"
 
-    @property
+    @functools.cached_property
     def nbytes(self) -> int:
+        # params are immutable after registration; the scheduler reads this
+        # every step, so the pytree walk must not repeat
         return int(sum(np.asarray(x).nbytes
                        for x in jax.tree.leaves(self.host_params)))
 
@@ -54,13 +58,26 @@ class CompositionOfExperts:
     """The Samba-CoE execution engine on the three-tier memory system."""
 
     def __init__(self, router, router_params, hbm_capacity_bytes: int,
-                 sharding=None):
+                 sharding=None, kv_reserve_bytes: int = 0):
+        """``kv_reserve_bytes`` carves a slice of the HBM tier out of the
+        expert weight cache for the serving engine's paged KV pool — the
+        explicit resident-experts vs concurrent-requests tradeoff
+        (``core.memory_tiers.HBMBudget``). ``self.hbm_budget`` records the
+        split; ``ServingEngine`` sizes its ``PagedKVCache`` from it."""
+        if not 0 <= kv_reserve_bytes < hbm_capacity_bytes:
+            raise ValueError(
+                f"kv_reserve_bytes={kv_reserve_bytes} must be in "
+                f"[0, hbm_capacity_bytes={hbm_capacity_bytes})")
         self.router = router
         self.router_params = router_params   # router lives in HBM (paper Fig 9)
         self.experts: Dict[str, ExpertHandle] = {}
         self._models: Dict[str, Any] = {}
+        self.hbm_budget = HBMBudget(
+            total_bytes=hbm_capacity_bytes,
+            weights_bytes=hbm_capacity_bytes - kv_reserve_bytes,
+            kv_bytes=kv_reserve_bytes)
         self.cache = HBMWeightCache(
-            hbm_capacity_bytes,
+            self.hbm_budget.weights_bytes,
             fetch=lambda name: self.experts[name].host_params,
             sharding=sharding,
         )

@@ -12,7 +12,11 @@ This module provides:
     collection: symbols with disjoint lifetimes share device addresses;
   * ``spill_order`` — the paper's bandwidth-aware spill heuristic: when HBM
     does not fit, spill symbols with the smallest aggregate transfer
-    footprint first (weights stay, low-reuse intermediates go).
+    footprint first (weights stay, low-reuse intermediates go);
+  * ``HBMBudget`` / ``plan_hbm_budget`` — the serving-time split of the HBM
+    tier between resident expert weights (the LRU cache of
+    ``core.switching``) and the paged KV pool of ``serving.kvcache``:
+    resident-experts vs concurrent-requests as ONE explicit tradeoff.
 """
 from __future__ import annotations
 
@@ -95,6 +99,54 @@ TPU_V5E_NODE = MachineTiers(
 )
 
 MACHINES = {m.name: m for m in (SN40L_NODE, DGX_A100, DGX_H100, TPU_V5E_NODE)}
+
+
+# ----------------------------------------------------------------------
+# Serving-time HBM split: expert weights vs paged KV pool
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HBMBudget:
+    """How one HBM tier is divided at serving time.
+
+    ``weights_bytes`` caps the ``HBMWeightCache`` (how many experts stay
+    resident, i.e. how many switches are HBM hits); ``kv_bytes`` caps the
+    ``PagedKVCache`` (how many requests decode concurrently). The two sum to
+    ``total_bytes`` — growing one shrinks the other, which is exactly the
+    CoE serving tradeoff of paper §V-B/§VI-C.
+    """
+    total_bytes: int
+    weights_bytes: int
+    kv_bytes: int
+
+    def resident_experts(self, expert_bytes: int) -> int:
+        return self.weights_bytes // max(expert_bytes, 1)
+
+    def kv_blocks(self, block_bytes: int) -> int:
+        return self.kv_bytes // max(block_bytes, 1)
+
+
+def plan_hbm_budget(total_bytes: int, expert_bytes: int, block_bytes: int,
+                    *, min_resident_experts: int = 2,
+                    kv_fraction: float = 0.2) -> HBMBudget:
+    """Split an HBM tier between the expert LRU cache and the KV pool.
+
+    Reserves ``kv_fraction`` of the tier for KV, but never shrinks the
+    weight share below ``min_resident_experts`` experts (the active expert
+    plus at least one prefetch target — otherwise every switch is a miss and
+    prefetch can never overlap decode) and never below one KV block.
+    """
+    if total_bytes < min_resident_experts * expert_bytes + block_bytes:
+        raise MemoryError(
+            f"HBM tier of {total_bytes} bytes cannot hold "
+            f"{min_resident_experts} experts ({expert_bytes} B each) plus "
+            f"one KV block ({block_bytes} B)")
+    kv = int(total_bytes * kv_fraction)
+    floor_w = min_resident_experts * expert_bytes
+    kv = min(kv, total_bytes - floor_w)
+    kv = max(kv, block_bytes)
+    return HBMBudget(total_bytes=total_bytes,
+                     weights_bytes=total_bytes - kv, kv_bytes=kv)
 
 
 # ----------------------------------------------------------------------

@@ -15,6 +15,15 @@ from typing import Optional
 import jax
 from jax.sharding import PartitionSpec
 
+try:                                   # public API, jax >= 0.6
+    shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x: experimental, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map_expt
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_expt(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=check_vma)
+
 _ACTIVATION_PSPEC: Optional[PartitionSpec] = None
 _NAMED: dict = {}
 

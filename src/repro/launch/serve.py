@@ -2,8 +2,8 @@
 
 Builds a Samba-CoE-style composition (router + N experts derived from one
 backbone config), loads all experts on the capacity tier (host DRAM = the
-paper's DDR), and serves batched requests through the three-tier switching
-engine. Reports the paper's Fig-1 breakdown (switch vs execute) and cache
+paper's DDR), and serves batched requests through the continuous-batching engine over
+the three-tier switching engine and paged KV pool. Reports the paper's Fig-1 breakdown (switch vs execute) and cache
 statistics.
 """
 from __future__ import annotations
@@ -21,9 +21,10 @@ from repro.models import get_model
 from repro.serving import Request, ServingEngine
 
 
-def build_coe(cfg, n_experts: int, hbm_fraction: float, seed: int = 0):
+def build_coe(cfg, n_experts: int, hbm_experts: float, seed: int = 0):
     """Create n_experts fine-tune-style variants of one backbone (the paper
-    derives all 150 experts from Llama2-7B)."""
+    derives all 150 experts from Llama2-7B). ``hbm_experts`` is the HBM
+    tier capacity in units of one expert."""
     model = get_model(cfg)
     rng = jax.random.PRNGKey(seed)
     base = model.init(rng)
@@ -31,7 +32,7 @@ def build_coe(cfg, n_experts: int, hbm_fraction: float, seed: int = 0):
     nbytes = sum(x.nbytes for x in jax.tree.leaves(host_base))
     coe = CompositionOfExperts(
         HashRouter(n_experts), None,
-        hbm_capacity_bytes=int(max(1, hbm_fraction * n_experts) * nbytes))
+        hbm_capacity_bytes=int(max(1.0, hbm_experts) * nbytes))
     domains = ["code", "math", "translate", "chat", "legal", "medical"]
     for i in range(n_experts):
         # cheap fine-tune stand-in: per-expert perturbation of the base
@@ -54,6 +55,9 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=8)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "run_to_completion"])
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args(argv)
 
@@ -61,11 +65,11 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced(cfg)
 
-    coe, nbytes = build_coe(cfg, args.n_experts,
-                            args.hbm_experts / args.n_experts)
-    coe.cache.capacity = int(args.hbm_experts * nbytes)
+    coe, nbytes = build_coe(cfg, args.n_experts, args.hbm_experts)
     engine = ServingEngine(coe, cfg,
-                           max_len=args.prompt_len + args.new_tokens)
+                           max_len=args.prompt_len + args.new_tokens,
+                           n_slots=args.n_slots, block_size=8,
+                           scheduler=args.scheduler)
 
     rs = np.random.RandomState(0)
     for i in range(args.requests):
@@ -75,14 +79,18 @@ def main(argv=None):
             max_new_tokens=args.new_tokens))
 
     t0 = time.perf_counter()
-    done = engine.step()
+    done = engine.drain()
     wall = time.perf_counter() - t0
     st = engine.stats
     print(f"served {len(done)} requests in {wall:.2f}s "
           f"({st.tokens_out} tokens, {st.tokens_per_second:.1f} tok/s)")
     print(f"breakdown: route={st.route_s:.3f}s switch={st.switch_s:.3f}s "
-          f"exec={st.exec_s:.3f}s  (paper Fig-1 split)")
-    print(f"cache: {coe.cache.stats}")
+          f"prefill={st.prefill_s:.3f}s decode={st.exec_s:.3f}s "
+          f"(paper Fig-1 split)")
+    print(f"scheduler: {st.decode_rounds} rounds, "
+          f"occupancy {st.mean_occupancy:.2f}, {st.switches} switches")
+    print(f"weight cache: {coe.cache.stats}")
+    print(f"kv pool: {engine.pool.stats}")
     return engine
 
 

@@ -1,7 +1,18 @@
-from repro.serving.engine import ServingEngine, Request, ServeStats, CompiledExpertRunner
+"""Serving layer: continuous-batching CoE engine over the paged KV pool.
+
+``ServingEngine`` (engine.py) schedules a persistent decode batch whose
+slots are block tables in ``PagedKVCache`` (kvcache.py); decode policy is
+pluggable (``GreedyDecode`` / ``SpeculativeDecode``). ``SpeculativeDecoder``
+(speculative.py) is the standalone dense-cache reference implementation of
+draft-verify decoding that the engine policy is tested against.
+"""
+from repro.serving.engine import (ServingEngine, Request, ServeStats,
+                                  PagedDecodeRunner, GreedyDecode,
+                                  SpeculativeDecode)
 from repro.serving.speculative import SpeculativeDecoder, SpecStats, extend_step
 from repro.serving.kvcache import PagedKVCache, PagedStats
 
-__all__ = ["ServingEngine", "Request", "ServeStats", "CompiledExpertRunner",
+__all__ = ["ServingEngine", "Request", "ServeStats", "PagedDecodeRunner",
+           "GreedyDecode", "SpeculativeDecode",
            "SpeculativeDecoder", "SpecStats", "extend_step",
            "PagedKVCache", "PagedStats"]

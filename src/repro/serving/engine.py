@@ -1,19 +1,40 @@
-"""Serving engine: batched request scheduling over the CoE.
+"""Continuous-batching CoE serving engine over the paged KV pool.
 
-The paper's deployment (§V-B, §VI-C): requests arrive, the router assigns an
-expert, prompts are grouped per expert, the switching engine activates
-experts through the HBM LRU cache with next-expert prefetch, and each group
-runs prefill + decode. This engine adds the production pieces around the
-CoE core: a request queue, jit-compiled per-(config, batch-shape) step
-functions (compiled once, reused across experts — all experts share the
-backbone config, the paper's §II setup), padding to batch buckets, timeout
-re-dispatch of straggling groups, and per-request latency accounting.
+The paper's deployment (§V-B, §VI-C) keeps the chip busy across expert
+switches: requests are routed to experts, grouped, and the switching engine
+hides DDR->HBM weight copies behind decode via next-expert prefetch. A
+run-to-completion scheduler loses exactly that property under load — slots
+idle while stragglers finish, and the queue waits for a full drain. This
+engine instead keeps a persistent decode batch:
+
+  * every decode slot's KV lives in ``PagedKVCache`` block tables — there is
+    no dense per-group cache; admission, growth and recycling are block-table
+    operations (``reserve``/``advance``/``free``);
+  * one jit-compiled *paged extend* step (fixed ``(n_slots, g)`` shape,
+    compiled once per engine) serves any subset of slots via an active-lane
+    mask — inactive lanes scatter to the pool's scratch block;
+  * per-step admission: newly-arrived requests for the active expert are
+    prefilled into free slots while decode continues, so the batch refills
+    the moment a slot recycles; when a group exhausts, the next expert is
+    chosen preferring experts already resident in the ``HBMWeightCache``
+    (switch = LRU hit); an aging counter admits any request stuck behind
+    that preference, so no queued expert starves;
+  * next-expert prefetch: each step the most-demanded non-resident expert is
+    prefetched so the eventual switch overlaps decode (paper Fig 9);
+  * decode policy is pluggable on the same slot machinery: ``GreedyDecode``
+    (one token per round) or ``SpeculativeDecode`` (draft-verify, §VI-B).
+
+``scheduler="run_to_completion"`` runs the OLD semantics — admit one expert
+group, decode until every request completes, drain, repeat — on the same
+paged substrate, so the two schedulers differ only in scheduling. That is
+the baseline of ``benchmarks/run.py --sweep-arrival``.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,145 +42,622 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.coe import CompositionOfExperts
-from repro.models import get_model
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.speculative import SpecStats
+
+
+@dataclass(eq=False)
+class Request:
+    rid: int
+    tokens: np.ndarray          # (S,) prompt
+    max_new_tokens: int
+    arrival_s: float = field(default_factory=time.perf_counter)
+    expert: Optional[str] = None        # routed at submit
+    prefill_done_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    output: Optional[np.ndarray] = None
+    skipped: int = 0                    # admission passes survived unadmitted
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_s is None else self.done_s - self.arrival_s
 
 
 @dataclass
-class Request:
-    rid: int
-    tokens: np.ndarray          # (S,)
-    max_new_tokens: int
-    arrival_s: float = field(default_factory=time.perf_counter)
-    done_s: Optional[float] = None
-    output: Optional[np.ndarray] = None
-    expert: Optional[str] = None
+class _Slot:
+    req: Request
+    expert: str
+    last_token: int                     # next decode input
+    generated: List[int]
+    admitted_step: int
 
-
-class CompiledExpertRunner:
-    """Caches jit-compiled prefill/decode for a (config, batch, seqlen)
-    bucket — compiled once, shared by every expert with that backbone."""
-
-    def __init__(self, cfg: ModelConfig, max_len: int):
-        self.cfg = cfg
-        self.model = get_model(cfg)
-        self.max_len = max_len
-        self._prefill = {}
-        self._decode = jax.jit(
-            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos),
-            donate_argnums=(1,))
-
-    def prefill(self, params, tokens):
-        key = tokens.shape
-        if key not in self._prefill:
-            self._prefill[key] = jax.jit(
-                lambda p, t: self.model.prefill(p, {"tokens": t}, self.max_len))
-        return self._prefill[key](params, tokens)
-
-    def decode(self, params, cache, tokens, pos):
-        return self._decode(params, cache, tokens, pos)
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new_tokens - len(self.generated)
 
 
 @dataclass
 class ServeStats:
     requests: int = 0
     tokens_out: int = 0
-    switch_s: float = 0.0
-    exec_s: float = 0.0
+    admitted: int = 0
+    decode_rounds: int = 0
+    switches: int = 0
+    starvation_overrides: int = 0
+    occupancy_sum: float = 0.0          # Σ active_slots/n_slots per round
     route_s: float = 0.0
-    retries: int = 0
+    switch_s: float = 0.0
+    prefill_s: float = 0.0
+    exec_s: float = 0.0
 
     @property
     def tokens_per_second(self):
-        t = self.switch_s + self.exec_s
+        t = self.switch_s + self.exec_s + self.prefill_s
         return self.tokens_out / t if t else 0.0
 
+    @property
+    def mean_occupancy(self):
+        return self.occupancy_sum / max(self.decode_rounds, 1)
+
+
+# ----------------------------------------------------------------------
+# Paged model execution (compiled once per (n_slots, g) shape)
+# ----------------------------------------------------------------------
+
+def _paged_extend(cfg: ModelConfig, params, pk, pv, tables, lengths, active,
+                  tokens, scratch_row: int):
+    """g-token extend step against the paged pool.
+
+    pk/pv   (L, rows, block, Hkv, dh) pool arrays (rows includes scratch)
+    tables  (B, maxb) int32 per-slot block tables (padded with scratch)
+    lengths (B,) int32 tokens already cached per slot
+    active  (B,) bool — lanes actually decoding this round; inactive lanes
+            scatter their (garbage) K/V to the scratch block and their
+            logits are ignored by the caller
+    tokens  (B, g) int32 inputs at positions lengths..lengths+g-1
+    Returns (logits (B,g,V), pk, pv).
+    """
+    from repro.models import layers as L
+    from repro.models import transformer as T
+
+    B, g = tokens.shape
+    block = pk.shape[2]
+    maxb = tables.shape[1]
+    S = maxb * block
+    h = T.embed_tokens(cfg, params, tokens)                       # (B,g,D)
+    positions = lengths[:, None] + jnp.arange(g, dtype=jnp.int32)[None]
+    blk_idx = jnp.minimum(positions // block, maxb - 1)
+    rows = jnp.take_along_axis(tables, blk_idx, axis=1)           # (B,g)
+    rows = jnp.where(active[:, None], rows, jnp.int32(scratch_row))
+    off = positions % block
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = kpos[None, None, :] <= positions[:, :, None]           # (B,g,S)
+    moe = cfg.n_experts > 0
+    Hq, dh = cfg.n_heads, cfg.head_dim
+
+    def body(hh, xs):
+        lp, kp, vp = xs                    # kp (rows, block, Hkv, dh)
+        p = lp["attn"]
+        hn = L.apply_norm(cfg, p["norm"], hh)
+        q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        kp = kp.at[rows, off].set(k.astype(kp.dtype))
+        vp = vp.at[rows, off].set(v.astype(vp.dtype))
+        kc = kp[tables].reshape(B, S, *kp.shape[2:])              # (B,S,Hkv,dh)
+        vc = vp[tables].reshape(B, S, *vp.shape[2:])
+        Hkv = kc.shape[2]
+        qg = q.reshape(B, g, Hkv, Hq // Hkv, dh)
+        s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc,
+                       preferred_element_type=jnp.float32) / math.sqrt(dh)
+        s = jnp.where(mask[:, None, None], s, -jnp.inf)
+        pa = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqs,bshd->bqhgd", pa.astype(vc.dtype), vc,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, g, Hq, dh).astype(hh.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        if cfg.attn_out_bias:
+            y = y + p["bo"]
+        hh = hh + y
+        hh = T._mlp(cfg, lp["mlp_norm"], lp["mlp"], hh, moe)
+        return hh, (kp, vp)
+
+    h, (pk, pv) = jax.lax.scan(body, h, (params["layers"], pk, pv))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = T.unembed(cfg, params, h)
+    return logits, pk, pv
+
+
+class PagedDecodeRunner:
+    """jit-compiled paged prefill / extend for one backbone config.
+
+    All experts of a Samba-CoE share the backbone (paper §II), so one runner
+    — one compiled extend per (n_slots, g) — serves every expert. Shareable
+    across engines to reuse the compile cache (the benchmark sweep does).
+    """
+
+    def __init__(self, cfg: ModelConfig, scratch_row: int):
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError("paged serving supports dense/moe families only")
+        if cfg.sliding_window:
+            raise ValueError("paged serving does not support sliding windows")
+        if cfg.first_dense_layers:
+            raise ValueError("paged serving: first_dense_layers unsupported")
+        self.cfg = cfg
+        self.scratch_row = scratch_row
+        self._prefill = {}                 # S -> jitted forward
+        self._extend = {}                  # (B, g) -> jitted extend
+
+    def prefill_kv(self, params, tokens):
+        """tokens (1,S) -> (last logits (V,), k, v each (L,S,Hkv,dh))."""
+        from repro.models import transformer as T
+        S = tokens.shape[1]
+        if S not in self._prefill:
+            cfg = self.cfg
+            self._prefill[S] = jax.jit(lambda p, t: T.forward(
+                cfg, p, {"tokens": t}, return_cache=True, last_only=True))
+        logits, caches = self._prefill[S](params, tokens)
+        k, v = caches[-1]
+        return logits[:, -1][0], k[:, 0], v[:, 0]
+
+    def extend(self, params, pk, pv, tables, lengths, active, tokens):
+        key = tokens.shape
+        if key not in self._extend:
+            cfg, scratch = self.cfg, self.scratch_row
+            self._extend[key] = jax.jit(
+                lambda p, pk, pv, tb, ln, ac, tk: _paged_extend(
+                    cfg, p, pk, pv, tb, ln, ac, tk, scratch),
+                donate_argnums=(1, 2))
+        return self._extend[key](params, pk, pv,
+                                 jnp.asarray(tables), jnp.asarray(lengths),
+                                 jnp.asarray(active), jnp.asarray(tokens))
+
+
+# ----------------------------------------------------------------------
+# Decode policies (pluggable on the slot machinery)
+# ----------------------------------------------------------------------
+
+class GreedyDecode:
+    """One argmax token per active slot per round."""
+
+    name = "greedy"
+    reserve_slack = 0                   # extra tokens reserved beyond output
+
+    def bind(self, engine: "ServingEngine"):
+        self.engine = engine
+
+    def on_admit(self, slot_idx: int, req: Request, params):
+        pass
+
+    def on_free(self, rid: int):
+        pass
+
+    def round(self, params, active: np.ndarray) -> Dict[int, List[int]]:
+        eng = self.engine
+        toks = np.zeros((eng.n_slots, 1), np.int32)
+        for i in np.nonzero(active)[0]:
+            # blocks were fully reserved at admission; only tokens needed
+            toks[i, 0] = eng.slots[i].last_token
+        tables, lengths = eng._device_tables()
+        logits, pk, pv = eng.runner.extend(params, eng.pool.k, eng.pool.v,
+                                           tables, lengths, active, toks)
+        eng.pool.k, eng.pool.v = pk, pv
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        return {int(i): [int(nxt[i])] for i in np.nonzero(active)[0]}
+
+
+class SpeculativeDecode:
+    """Draft-verify decode (paper §VI-B) on the paged slot machinery.
+
+    A small shared draft expert proposes ``gamma`` tokens per slot; the
+    target expert verifies all of them in ONE paged extend; the longest
+    matching prefix plus one corrected token is emitted — with greedy
+    acceptance the output is token-for-token identical to ``GreedyDecode``.
+    The draft keeps its own paged pool, with block tables mirroring the
+    target's slots. In a CoE the draft is simply another (small) composition
+    member kept resident in HBM alongside the active target (§VI-B).
+
+    Provisioning note: the draft pool (``d_pool``, same block count as the
+    target pool but draft-sized blocks) and the draft weights are allocated
+    IN ADDITION to the engine's pool — when planning an ``HBMBudget`` for a
+    speculative deployment, count ``d_pool.capacity_bytes()`` and the draft
+    weights against the tier yourself; the kv_reserve carve only covers the
+    target pool.
+    """
+
+    name = "speculative"
+
+    def __init__(self, draft_cfg: ModelConfig, draft_host_params,
+                 gamma: int = 4):
+        self.draft_cfg = draft_cfg
+        self.gamma = gamma
+        self.reserve_slack = gamma
+        self._draft_host = draft_host_params
+        self.stats = SpecStats()
+
+    def bind(self, engine: "ServingEngine"):
+        if self.draft_cfg.vocab_size != engine.cfg.vocab_size:
+            raise ValueError("draft/target vocab mismatch")
+        self.engine = engine
+        self.d_params = jax.device_put(self._draft_host)
+        self.d_pool = PagedKVCache(
+            engine.pool.n_blocks, engine.block,
+            self.draft_cfg.n_layers, self.draft_cfg.n_kv_heads,
+            self.draft_cfg.head_dim, dtype=engine.pool.k.dtype, scratch=True)
+        self.d_runner = PagedDecodeRunner(self.draft_cfg,
+                                          self.d_pool.scratch_index)
+
+    def on_admit(self, slot_idx: int, req: Request, params):
+        # draft prefills the same prompt into its own pool
+        self.d_pool.open(req.rid)
+        _, k, v = self.d_runner.prefill_kv(self.d_params,
+                                           jnp.asarray(req.tokens[None]))
+        self.d_pool.append(req.rid, k, v)
+        self.d_pool.reserve(req.rid, req.max_new_tokens + self.gamma)
+
+    def on_free(self, rid: int):
+        self.d_pool.free(rid)
+
+    def round(self, params, active: np.ndarray) -> Dict[int, List[int]]:
+        eng = self.engine
+        B, g = eng.n_slots, self.gamma
+        rows = np.nonzero(active)[0]
+        cur = np.zeros((B, 1), np.int32)
+        for i in rows:
+            # both pools were fully reserved (incl. gamma slack) at admission
+            cur[i, 0] = eng.slots[i].last_token
+
+        tables, lengths = eng._device_tables()
+        d_tables = np.stack([
+            self.d_pool.padded_table(eng.slots[i].req.rid, eng.max_blocks)
+            if eng.slots[i] is not None else eng._empty_table
+            for i in range(B)])
+
+        # --- draft proposes gamma tokens autoregressively
+        props = np.zeros((B, g), np.int32)
+        d_in = cur
+        for t in range(g):
+            lg, dk, dv = self.d_runner.extend(
+                self.d_params, self.d_pool.k, self.d_pool.v,
+                d_tables, lengths + t, active, d_in)
+            self.d_pool.k, self.d_pool.v = dk, dv
+            d_in = np.asarray(jnp.argmax(lg[:, -1], -1), np.int32)[:, None]
+            props[:, t] = d_in[:, 0]
+            self.stats.draft_calls += 1
+
+        # --- target verifies all gamma in one paged extend
+        prop_inputs = np.concatenate([cur, props[:, :-1]], axis=1)   # (B,g)
+        t_lg, pk, pv = eng.runner.extend(params, eng.pool.k, eng.pool.v,
+                                         tables, lengths, active, prop_inputs)
+        eng.pool.k, eng.pool.v = pk, pv
+        self.stats.target_calls += 1
+        t_next = np.asarray(jnp.argmax(t_lg, -1), np.int32)          # (B,g)
+
+        emits: Dict[int, List[int]] = {}
+        for i in rows:
+            match = props[i] == t_next[i]
+            prefix = 0
+            while prefix < g and match[prefix]:
+                prefix += 1
+            self.stats.proposed += g
+            self.stats.accepted += prefix
+            e = min(prefix + 1, g, eng.slots[i].remaining)
+            emits[int(i)] = [int(x) for x in t_next[i, :e]]
+            self.d_pool.advance(eng.slots[i].req.rid, e)
+        return emits
+
+
+# ----------------------------------------------------------------------
+# The engine
+# ----------------------------------------------------------------------
 
 class ServingEngine:
-    def __init__(self, coe: CompositionOfExperts, cfg: ModelConfig,
-                 max_len: int = 4096, batch_buckets=(1, 4, 8),
-                 group_timeout_s: float = 120.0):
-        self.coe = coe
-        self.runner = CompiledExpertRunner(cfg, max_len)
-        self.queue: List[Request] = []
-        self.stats = ServeStats()
-        self.buckets = tuple(sorted(batch_buckets))
-        self.group_timeout_s = group_timeout_s
+    """Continuous-batching scheduler over the paged KV pool.
 
+    ``step()`` is one scheduler iteration: pick/keep the active expert,
+    admit newly-arrived requests into free slots (prefill), prefetch the
+    next-most-demanded expert, run one decode round for the active expert's
+    slots, recycle completed slots. ``drain()`` loops until idle.
+    """
+
+    def __init__(self, coe: CompositionOfExperts, cfg: ModelConfig, *,
+                 max_len: int = 4096, n_slots: int = 8, block_size: int = 16,
+                 kv_budget_bytes: Optional[int] = None,
+                 policy=None, scheduler: str = "continuous",
+                 switch_quantum: int = 8, starvation_limit: int = 16,
+                 runner: Optional[PagedDecodeRunner] = None,
+                 kv_dtype=jnp.bfloat16):
+        if scheduler not in ("continuous", "run_to_completion"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        self.coe = coe
+        self.cfg = cfg
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.block = block_size
+        self.scheduler = scheduler
+        self.switch_quantum = switch_quantum
+        self.starvation_limit = starvation_limit
+        self.policy = policy or GreedyDecode()
+        self.max_blocks = -(-(max_len + self.policy.reserve_slack)
+                            // block_size)
+
+        if kv_budget_bytes is None:
+            # default: every slot can hold a full-length request, + scratch
+            kv_budget_bytes = coe.hbm_budget.kv_bytes or (
+                (self.n_slots * self.max_blocks + 1)
+                * PagedKVCache.block_bytes(
+                    block_size, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
+                    kv_dtype))
+        self.pool = PagedKVCache.for_budget(
+            kv_budget_bytes, block_size, cfg.n_layers, cfg.n_kv_heads,
+            cfg.head_dim, kv_dtype, scratch=True)
+        self._empty_table = np.full((self.max_blocks,),
+                                    self.pool.scratch_index, np.int32)
+        self.runner = runner or PagedDecodeRunner(cfg, self.pool.scratch_index)
+        if self.runner.scratch_row != self.pool.scratch_index:
+            raise ValueError(
+                "shared runner was compiled for a different pool size "
+                f"(scratch row {self.runner.scratch_row} != "
+                f"{self.pool.scratch_index})")
+        self.policy.bind(self)
+
+        self.queue: List[Request] = []
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self.stats = ServeStats()
+        self._active_expert: Optional[str] = None
+        self._quantum_used = 0
+        self._step_count = 0
+
+    # -- public API -------------------------------------------------------
     def submit(self, req: Request):
+        """Route and enqueue. Routing happens once, at arrival (§II)."""
+        S = len(req.tokens)
+        need = S + req.max_new_tokens + self.policy.reserve_slack
+        if need > self.max_blocks * self.block:
+            raise ValueError(
+                f"request {req.rid}: {need} tokens exceed engine max_len "
+                f"{self.max_len}")
+        if -(-need // self.block) > self.pool.n_blocks:
+            raise ValueError(
+                f"request {req.rid} needs more KV blocks than the pool owns")
+        t0 = time.perf_counter()
+        names = self.coe.expert_names()
+        e = int(self.coe.route(np.asarray(req.tokens)[None])[0]) % len(names)
+        self.stats.route_s += time.perf_counter() - t0
+        req.expert = names[e]
         self.queue.append(req)
 
-    def _bucket(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        return self.buckets[-1]
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
 
     def step(self) -> List[Request]:
-        """Serve everything currently queued; returns completed requests."""
-        if not self.queue:
-            return []
-        reqs, self.queue = self.queue, []
-        S = max(len(r.tokens) for r in reqs)
-        toks = np.zeros((len(reqs), S), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, S - len(r.tokens):] = r.tokens     # left-pad
-
-        t0 = time.perf_counter()
-        eidx = self.coe.route(toks) % len(self.coe.expert_names())
-        self.stats.route_s += time.perf_counter() - t0
-        names = self.coe.expert_names()
-
-        groups: Dict[int, List[int]] = {}
-        for i, e in enumerate(eidx):
-            groups.setdefault(int(e), []).append(i)
-
+        """One scheduler iteration; returns requests completed in it."""
+        self._step_count += 1
         done: List[Request] = []
-        glist = sorted(groups.items())
-        for gi, (e, rows) in enumerate(glist):
-            name = names[e]
-            t0 = time.perf_counter()
-            params = self.coe.cache.activate(name)
-            self.stats.switch_s += time.perf_counter() - t0
-            if gi + 1 < len(glist):
-                self.coe.cache.prefetch(names[glist[gi + 1][0]])
-
-            n_new = max(reqs[i].max_new_tokens for i in rows)
-            bucket = self._bucket(len(rows))
-            sub = np.zeros((bucket, S), np.int32)
-            sub[: len(rows)] = toks[rows]
-
-            t0 = time.perf_counter()
-            attempts = 0
-            while True:
-                attempts += 1
-                try:
-                    out = self._run_group(params, jnp.asarray(sub), S, n_new)
-                    break
-                except Exception:
-                    # straggler / transient failure mitigation: re-dispatch
-                    # once (on real clusters: to a spare replica)
-                    self.stats.retries += 1
-                    if attempts >= 2:
-                        raise
-            self.stats.exec_s += time.perf_counter() - t0
-
-            for j, i in enumerate(rows):
-                r = reqs[i]
-                r.output = out[j, : r.max_new_tokens]
-                r.expert = name
-                r.done_s = time.perf_counter()
-                self.stats.tokens_out += int(r.max_new_tokens)
-                done.append(r)
+        name = self._pick_expert()
+        if name is None:
+            return done
+        if name != self._active_expert:
+            self._switch_to(name)
+        self._admit(done)
+        self._prefetch_next()
+        active = np.array([s is not None and s.expert == self._active_expert
+                           for s in self.slots], bool)
+        if active.any():
+            self._decode_round(active, done)
+        self._quantum_used += 1
         self.stats.requests += len(done)
         return done
 
-    def _run_group(self, params, tokens, S, n_new) -> np.ndarray:
-        last, cache = self.runner.prefill(params, tokens)
-        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        outs = [tok]
-        for t in range(n_new - 1):
-            lg, cache = self.runner.decode(params, cache, tok[:, None],
-                                           jnp.int32(S + t))
-            tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            outs.append(tok)
-        return np.asarray(jax.device_get(jnp.stack(outs, axis=1)))
+    def drain(self, max_steps: int = 1_000_000) -> List[Request]:
+        """Run until queue and slots are empty; returns all completions.
+        (Per-request pool-fit is enforced at ``submit``, so every queued
+        request is eventually admissible and the loop terminates.)"""
+        out: List[Request] = []
+        steps = 0
+        while self.has_work:
+            out.extend(self.step())
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError("drain: exceeded max_steps")
+        return out
+
+    # -- scheduling internals --------------------------------------------
+    def _blocks_for(self, req: Request) -> int:
+        need = (len(req.tokens) + req.max_new_tokens
+                + self.policy.reserve_slack)
+        return -(-need // self.block)
+
+    def _pick_expert(self) -> Optional[str]:
+        occupied: Dict[str, List[_Slot]] = {}
+        for s in self.slots:
+            if s is not None:
+                occupied.setdefault(s.expert, []).append(s)
+        if self.scheduler == "run_to_completion":
+            if occupied:
+                return self._active_expert
+            return self.queue[0].expert if self.queue else None
+        if self._active_expert in occupied:
+            # rotate ONLY among experts with slots ready to decode — leaving
+            # a live batch for a queue-only expert would abandon admitted
+            # work and thrash the weight cache; queue-only experts get in
+            # via admission prebatching or the starvation override.
+            others = [e for e in occupied if e != self._active_expert]
+            if self._quantum_used < self.switch_quantum or not others:
+                return self._active_expert
+            return min(others, key=lambda e: min(    # longest-waiting batch
+                s.admitted_step for s in occupied[e]))
+        if occupied:         # active expert drained: longest-waiting slots
+            return min(occupied, key=lambda e: min(
+                s.admitted_step for s in occupied[e]))
+        if not self.queue:
+            return None                  # no slots, no queue: idle
+        # choose from the queue: starving first, then resident, then FIFO
+        starving = [r for r in self.queue if r.skipped >= self.starvation_limit]
+        if starving:
+            self.stats.starvation_overrides += 1
+            return starving[0].expert
+        resident = [r for r in self.queue if self.coe.cache.resident(r.expert)]
+        pick_from = resident or self.queue
+        demand: Dict[str, int] = {}
+        for r in pick_from:
+            demand[r.expert] = demand.get(r.expert, 0) + 1
+        return max(demand, key=demand.get)
+
+    def _switch_to(self, name: str):
+        t0 = time.perf_counter()
+        self._params = self.coe.cache.activate(name)
+        self.stats.switch_s += time.perf_counter() - t0
+        if self._active_expert is not None:
+            self.stats.switches += 1
+        self._active_expert = name
+        self._quantum_used = 0
+
+    def _admit(self, done: List[Request]):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        if self.scheduler == "run_to_completion":
+            if any(s is not None for s in self.slots):
+                return                       # batch still running: no refill
+            candidates = [r for r in self.queue
+                          if r.expert == self._active_expert]
+        else:
+            # refill ONLY from the active expert's queue: one expert's
+            # weights are live at a time, so a foreign-expert slot would sit
+            # idle and shrink every decode batch it rides in. Other experts
+            # get in when the active group exhausts (group selection in
+            # _pick_expert prefers resident experts) — except requests aged
+            # past the starvation limit, which are admitted unconditionally.
+            starving = [r for r in self.queue
+                        if r.skipped >= self.starvation_limit]
+            active_reqs = [r for r in self.queue
+                           if r.expert == self._active_expert
+                           and r not in starving]
+            candidates = starving + active_reqs
+        admitted = []
+        for r in candidates:
+            if not free:
+                break
+            if self._blocks_for(r) > self.pool.free_blocks:
+                break                        # KV backpressure: stop admitting
+            self._prefill_into_slot(free.pop(0), r, done)
+            admitted.append(r)
+        if admitted:
+            # age only requests passed over while the active group consumed
+            # admission capacity — idle tail steps (free slots, nothing to
+            # admit) are not preference and must not trip the override
+            for r in self.queue:
+                if r not in admitted:
+                    r.skipped += 1
+        self.queue = [r for r in self.queue if r not in admitted]
+
+    def _prefill_into_slot(self, slot_idx: int, req: Request,
+                           done: List[Request]):
+        t0 = time.perf_counter()
+        params = self.coe.cache.activate(req.expert)
+        if (req.expert != self._active_expert
+                and self._active_expert is not None):
+            # a foreign (starving) admission may have evicted the decoding
+            # expert; re-activate so residency, LRU order and the hit/miss
+            # stats keep describing what is actually executing
+            self._params = self.coe.cache.activate(self._active_expert)
+        self.stats.switch_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        last, k, v = self.runner.prefill_kv(params,
+                                            jnp.asarray(req.tokens[None]))
+        first = int(jnp.argmax(last))
+        self.pool.open(req.rid)
+        self.pool.append(req.rid, k, v)
+        # commit the request's whole block budget now so admission's
+        # free_blocks check can never over-admit into mid-decode exhaustion
+        self.pool.reserve(req.rid,
+                          req.max_new_tokens + self.policy.reserve_slack)
+        self.stats.prefill_s += time.perf_counter() - t0
+        now = time.perf_counter()
+        req.prefill_done_s = now
+        req.first_token_s = now
+        self.stats.admitted += 1
+        self.stats.tokens_out += 1
+        slot = _Slot(req=req, expert=req.expert, last_token=first,
+                     generated=[first], admitted_step=self._step_count)
+        # admit on the policy before any possible _finish: on_free must only
+        # ever see rids that on_admit opened (e.g. the speculative draft pool)
+        self.policy.on_admit(slot_idx, req, params)
+        if slot.remaining == 0:              # max_new_tokens == 1
+            self._finish(slot, done)
+            return
+        self.slots[slot_idx] = slot
+
+    def _prefetch_next(self):
+        """One-ahead prefetch of the next switch target so the eventual
+        switch overlaps decode (paper §V-B / Fig 9): the longest-waiting
+        foreign batch if one is ready (that is what rotation picks), else
+        the most-demanded queued expert (that is what group selection
+        picks). Already resident -> nothing to do; prefetching anything
+        else would just thrash the LRU cache."""
+        waiting: Dict[str, int] = {}
+        for s in self.slots:
+            if s is not None and s.expert != self._active_expert:
+                waiting[s.expert] = min(waiting.get(s.expert, 1 << 30),
+                                        s.admitted_step)
+        if waiting:
+            name = min(waiting, key=waiting.get)
+        else:
+            demand: Dict[str, int] = {}
+            for r in self.queue:
+                if r.expert != self._active_expert:
+                    demand[r.expert] = demand.get(r.expert, 0) + 1
+            if not demand:
+                return
+            name = max(demand, key=demand.get)
+        if self.coe.cache.resident(name):
+            return
+        need = self.coe.experts[name].nbytes
+        active_bytes = (self.coe.experts[self._active_expert].nbytes
+                        if self._active_expert else 0)
+        if need + active_bytes <= self.coe.cache.capacity:
+            self.coe.cache.prefetch(name)
+
+    def _device_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        tables = np.stack([
+            self.pool.padded_table(s.req.rid, self.max_blocks)
+            if s is not None else self._empty_table
+            for s in self.slots])
+        lengths = np.array([self.pool.length(s.req.rid) if s is not None
+                            else 0 for s in self.slots], np.int32)
+        return tables, lengths
+
+    def _decode_round(self, active: np.ndarray, done: List[Request]):
+        t0 = time.perf_counter()
+        emits = self.policy.round(self._params, active)
+        for i, toks in emits.items():
+            slot = self.slots[i]
+            n = len(toks)
+            if n == 0:
+                continue
+            self.pool.advance(slot.req.rid, n)
+            slot.generated.extend(toks)
+            slot.last_token = toks[-1]
+            self.stats.tokens_out += n
+            if slot.remaining <= 0:
+                self._finish(slot, done)
+                self.slots[i] = None         # immediate slot recycling
+        self.stats.exec_s += time.perf_counter() - t0
+        self.stats.decode_rounds += 1
+        self.stats.occupancy_sum += float(active.sum()) / self.n_slots
+
+    def _finish(self, slot: _Slot, done: List[Request]):
+        req = slot.req
+        req.output = np.asarray(slot.generated[: req.max_new_tokens],
+                                np.int32)
+        req.done_s = time.perf_counter()
+        self.pool.free(req.rid)
+        self.policy.on_free(req.rid)
+        done.append(req)

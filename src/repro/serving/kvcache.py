@@ -5,8 +5,23 @@ core/switching.py), the router, and per-request KV caches. A paged pool
 (vLLM-style block tables) bounds the KV population: requests allocate
 fixed-size blocks on demand, free them on completion, and fragmentation is
 impossible by construction. The pool's byte budget plugs into the same
-three-tier accounting the expert cache uses, so the CoE runtime can trade
-resident experts against concurrent requests explicitly.
+three-tier accounting the expert cache uses (``core.memory_tiers.HBMBudget``),
+so the CoE runtime can trade resident experts against concurrent requests
+explicitly.
+
+This pool is the ONLY KV storage of ``serving.engine.ServingEngine``: every
+decode slot is a block table here. Two access paths coexist:
+
+  * host path — ``open/append/gather/free`` (prefill writes, reference
+    reads, recycling);
+  * device path — the engine's jitted paged decode step scatters new K/V
+    directly into ``self.k/self.v`` and the engine commits the updated
+    arrays plus ``advance``d lengths afterwards. ``reserve`` must have been
+    called first so the block table covers the written positions.
+
+With ``scratch=True`` the pool carries one extra block (index
+``scratch_index``) that is never allocated to a request: inactive decode
+lanes scatter there so a single compiled step can serve any slot subset.
 """
 from __future__ import annotations
 
@@ -30,28 +45,71 @@ class PagedKVCache:
     """Block-paged K/V pool. Layout: (n_blocks, block, kv_heads, head_dim)."""
 
     def __init__(self, n_blocks: int, block_size: int, n_layers: int,
-                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
+                 scratch: bool = False):
         self.n_blocks = n_blocks
         self.block = block_size
-        self.k = jnp.zeros((n_layers, n_blocks, block_size, kv_heads, head_dim),
+        rows = n_blocks + (1 if scratch else 0)
+        self.k = jnp.zeros((n_layers, rows, block_size, kv_heads, head_dim),
                            dtype)
         self.v = jnp.zeros_like(self.k)
+        self.scratch_index: Optional[int] = n_blocks if scratch else None
         self._free: List[int] = list(range(n_blocks))[::-1]
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
         self.stats = PagedStats()
+
+    # -- sizing ------------------------------------------------------------
+    @staticmethod
+    def block_bytes(block_size: int, n_layers: int, kv_heads: int,
+                    head_dim: int, dtype=jnp.bfloat16) -> int:
+        """Bytes of one K+V block across all layers."""
+        itemsize = jnp.dtype(dtype).itemsize
+        return 2 * n_layers * block_size * kv_heads * head_dim * itemsize
+
+    @classmethod
+    def for_budget(cls, budget_bytes: int, block_size: int, n_layers: int,
+                   kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
+                   scratch: bool = False) -> "PagedKVCache":
+        """Largest pool whose K+V arrays fit in ``budget_bytes`` (the KV share
+        of the HBM tier from ``core.memory_tiers.plan_hbm_budget``). The
+        scratch row, when requested, counts against the budget."""
+        per = cls.block_bytes(block_size, n_layers, kv_heads, head_dim, dtype)
+        n_blocks = int(budget_bytes // per) - (1 if scratch else 0)
+        if n_blocks < 1:
+            raise MemoryError(
+                f"KV budget {budget_bytes} bytes < "
+                f"{'scratch + ' if scratch else ''}one block ({per} bytes)")
+        return cls(n_blocks, block_size, n_layers, kv_heads, head_dim,
+                   dtype, scratch=scratch)
 
     # -- bookkeeping -------------------------------------------------------
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    def _per_block_bytes(self) -> int:
+        L, _, blk, H, dh = self.k.shape
+        return self.block_bytes(blk, L, H, dh, self.k.dtype)
+
+    def capacity_bytes(self) -> int:
+        """Bytes of the allocatable blocks (scratch row excluded)."""
+        return self.n_blocks * self._per_block_bytes()
+
     def bytes_in_use(self) -> int:
-        per_block = int(np.prod(self.k.shape[2:])) * self.k.dtype.itemsize * 2
-        return self.stats.blocks_in_use * per_block * self.k.shape[0]
+        return self.stats.blocks_in_use * self._per_block_bytes()
 
     def table(self, rid: int) -> List[int]:
         return list(self._tables[rid])
+
+    def padded_table(self, rid: int, max_blocks: int) -> np.ndarray:
+        """(max_blocks,) int32 block table padded with the scratch index
+        (or block 0 when no scratch row exists) for the jitted decode step."""
+        pad = self.scratch_index if self.scratch_index is not None else 0
+        tbl = self._tables[rid]
+        out = np.full((max_blocks,), pad, np.int32)
+        out[: len(tbl)] = tbl
+        return out
 
     def length(self, rid: int) -> int:
         return self._lengths[rid]
@@ -74,17 +132,30 @@ class PagedKVCache:
             self.stats.peak_blocks = max(self.stats.peak_blocks,
                                          self.stats.blocks_in_use)
 
+    def reserve(self, rid: int, n_tokens: int):
+        """Grow the block table so ``n_tokens`` more tokens fit. The engine's
+        jitted step then scatters into the reserved positions directly."""
+        self._ensure(rid, n_tokens)
+
+    def advance(self, rid: int, n_tokens: int):
+        """Commit ``n_tokens`` device-written tokens (after a jitted decode
+        step that scattered into ``self.k/self.v``)."""
+        need = -(-(self._lengths[rid] + n_tokens) // self.block)
+        if need > len(self._tables[rid]):
+            raise RuntimeError(
+                f"advance({rid}, {n_tokens}) beyond reserved blocks")
+        self._lengths[rid] += n_tokens
+
     def append(self, rid: int, k_new, v_new):
         """k_new/v_new (L, n_tokens, kv_heads, head_dim) for one request."""
         L, n, H, dh = k_new.shape
         self._ensure(rid, n)
         start = self._lengths[rid]
-        for i in range(n):                       # token-granular placement
-            tok = start + i
-            blk = self._tables[rid][tok // self.block]
-            off = tok % self.block
-            self.k = self.k.at[:, blk, off].set(k_new[:, i])
-            self.v = self.v.at[:, blk, off].set(v_new[:, i])
+        toks = np.arange(start, start + n)
+        blks = np.asarray(self._tables[rid], np.int32)[toks // self.block]
+        offs = (toks % self.block).astype(np.int32)
+        self.k = self.k.at[:, blks, offs].set(k_new.astype(self.k.dtype))
+        self.v = self.v.at[:, blks, offs].set(v_new.astype(self.v.dtype))
         self._lengths[rid] = start + n
 
     def gather(self, rid: int):

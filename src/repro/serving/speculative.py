@@ -11,6 +11,12 @@ greedy decode — the test suite asserts this token-for-token.
 In a CoE this is a natural fit: the composition already hosts many models,
 so a small general expert doubles as the draft for larger specialists, and
 the three-tier switching engine keeps both resident in HBM.
+
+This module is the standalone, dense-cache REFERENCE implementation (one
+request batch, its own prefill/extend). Production serving uses
+``engine.SpeculativeDecode`` — the same draft-verify algorithm as a decode
+policy on the continuous-batching engine's paged slot machinery — and the
+test suite asserts both match the target's greedy decode token-for-token.
 """
 from __future__ import annotations
 

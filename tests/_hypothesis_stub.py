@@ -1,0 +1,79 @@
+"""Minimal hypothesis-compatible fallback used when the real ``hypothesis``
+package is not installed (the CI/container baseline ships without it).
+
+Implements exactly the surface this test suite uses — ``given``, ``settings``
+and ``strategies.integers/lists/sampled_from/composite`` — as deterministic
+random sampling (seeded PRNG, ``max_examples`` draws per test). No shrinking,
+no database; a failing example fails the test directly with its drawn values
+in the traceback.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rnd: rnd.choice(elements))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+    return Strategy(draw)
+
+
+def composite(fn):
+    """@st.composite: fn(draw, *args) -> value becomes fn(*args) -> Strategy."""
+    def build(*args, **kwargs):
+        def draw_fn(rnd):
+            return fn(lambda s: s.example(rnd), *args, **kwargs)
+        return Strategy(draw_fn)
+    return build
+
+
+def settings(max_examples: int = 25, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    def deco(fn):
+        n = getattr(fn, "_stub_max_examples", 25)
+
+        # NOTE: signature must expose no positional params — pytest would
+        # otherwise try to resolve the wrapped test's drawn args as fixtures.
+        def wrapper(**kwargs):
+            rnd = random.Random(0)
+            for _ in range(n):
+                fn(*[s.example(rnd) for s in strats], **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.Strategy = Strategy
+strategies.integers = integers
+strategies.lists = lists
+strategies.sampled_from = sampled_from
+strategies.composite = composite

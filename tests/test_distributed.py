@@ -2,6 +2,8 @@
 pipeline parallelism, gradient compression. Multi-device cases run in
 subprocesses with --xla_force_host_platform_device_count (tests themselves
 stay on 1 device)."""
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -18,12 +20,16 @@ from repro.models import get_model
 from repro.models.common import ParamSpec
 
 
+_ROOT = str(pathlib.Path(__file__).resolve().parent.parent)
+
+
 def _run_sub(code: str):
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
-                       cwd="/root/repo")
+                       env={"PYTHONPATH": "src", "PATH": os.environ["PATH"],
+                            "HOME": os.environ.get("HOME", "/root"),
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd=_ROOT)
     assert r.returncode == 0, r.stdout + r.stderr
     return r.stdout
 
@@ -109,8 +115,8 @@ def test_pipeline_parallel_matches_sequential():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
         from repro.distributed.pipeline import pipeline_apply, sequential_apply
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("stage",))
         S, M, D = 4, 6, 16
         k = jax.random.PRNGKey(0)
         params = {"w": jax.random.normal(k, (S, D, D)) * 0.3,
@@ -131,8 +137,8 @@ def test_int8_compressed_allreduce_accuracy():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
         from repro.distributed.compression import make_compressed_allreduce
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
         red = make_compressed_allreduce(mesh, "data")({"g": g})["g"]
         exact = g.mean(0)

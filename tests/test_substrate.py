@@ -229,16 +229,17 @@ def test_serving_engine_end_to_end(rng):
     coe = CompositionOfExperts(HashRouter(2), None, 3 * nbytes)
     for i, h in enumerate(experts):
         coe.register(ExpertHandle(f"e{i}", cfg, h))
-    eng = ServingEngine(coe, cfg, max_len=24)
+    eng = ServingEngine(coe, cfg, max_len=24, n_slots=4, block_size=8)
     rs = np.random.RandomState(0)
     for i in range(5):
         eng.submit(Request(rid=i, tokens=rs.randint(
             0, cfg.vocab_size, (16,)).astype(np.int32), max_new_tokens=4))
-    done = eng.step()
+    done = eng.drain()
     assert len(done) == 5
     assert all(r.output.shape == (4,) for r in done)
     assert eng.stats.tokens_out == 20
     assert eng.stats.exec_s > 0
+    assert eng.pool.stats.blocks_in_use == 0     # every slot recycled
 
 
 def test_grad_accumulation_matches_full_batch(rng):

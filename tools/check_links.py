@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Docs link check: every relative markdown link must resolve to a file.
+
+Scans the repo's top-level *.md plus docs/ for ``[text](target)`` links,
+ignores absolute URLs and pure anchors, and fails (exit 1) listing every
+dangling target. Run from anywhere:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    yield from ROOT.glob("*.md")
+    yield from (ROOT / "docs").glob("**/*.md")
+
+
+def main() -> int:
+    bad = []
+    for md in sorted(md_files()):
+        for target in LINK.findall(md.read_text()):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                bad.append(f"{md.relative_to(ROOT)}: dangling link -> {target}")
+    if bad:
+        print("\n".join(bad))
+        return 1
+    print(f"docs link check: OK ({len(list(md_files()))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
