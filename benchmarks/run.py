@@ -279,16 +279,155 @@ def bench_fig1_switching_measured():
     emit("fig1_measured_breakdown", total * 1e6,
          f"switch%={100*st.switch_s/total:.1f},exec%={100*exec_s/total:.1f},"
          f"hits={coe.cache.stats.hits},misses={coe.cache.stats.misses}")
-    bw = coe.cache.stats.bytes_copied_in / max(coe.cache.stats.switch_seconds,
-                                               1e-9)
-    emit("fig1_measured_copy_bw", coe.cache.stats.switch_seconds * 1e6,
-         f"host_to_device_GBps={bw/1e9:.2f}")
+    cs = coe.cache.stats
+    # copy bandwidth over the full load path (store read + H2D), not the
+    # caller-side stall — prefetch hides most of the latter
+    bw = cs.bytes_copied_in / max(cs.copy_seconds, 1e-9)
+    emit("fig1_measured_copy_bw", cs.copy_seconds * 1e6,
+         f"host_to_device_GBps={bw/1e9:.2f},"
+         f"stall_s={cs.switch_seconds:.4f},overlap={cs.overlap_ratio:.2f}")
+
+
+# ----------------------------------------------------------------------
+# Fig 12 (measured): switch latency + tokens/s vs expert count + backend
+# ----------------------------------------------------------------------
+def bench_sweep_switching(tiny: bool = False):
+    """Measured Fig-12 companion to the analytic ``fig12`` rows: sweep the
+    number of hosted experts and the capacity-tier backend (host DRAM,
+    mmap-on-disk, int8-quantized) with the HBM tier pinned to ~1.5 experts,
+    so every switch must reload from the store. ``mode=async`` runs the
+    double-buffered prefetch pipeline (next group's expert loads during the
+    current group's decode); ``mode=cold`` disables prefetch — the
+    cold-reload baseline where the whole store-read + H2D copy sits on the
+    critical path. ``overlap_ratio`` compares per-switch stalls where the
+    modes actually differ — async's stall per *prefetched* switch vs cold's
+    stall per miss — because each generate() pass opens with one
+    unavoidable cold miss in BOTH modes, and a total-stall ratio would let
+    that shared term drown the signal at small sweep sizes. Emits
+    ``results/bench_switching.json`` (rows + a flat ``metrics`` dict that
+    ``tools/check_bench.py`` gates CI on)."""
+    import shutil
+    import tempfile
+
+    from repro.configs import get_config, reduced
+    from repro.core import CompositionOfExperts, ExpertHandle
+    from repro.models import get_model
+    from repro.store import make_store
+
+    class FirstTokenRouter:
+        def __init__(self, n):
+            self.n = n
+
+        def route(self, params, tokens):
+            return jnp.asarray(np.asarray(tokens)[:, 0] % self.n)
+
+    cfg = reduced(get_config("samba-coe-expert-7b"))
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    counts = [2, 3] if tiny else [2, 4, 6]
+    per_expert = 1 if tiny else 2            # prompts per expert group
+    n_tokens = 6 if tiny else 12
+    rounds = 2                               # timed generate() passes
+    S = 8
+    hosts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+             for i in range(max(counts))]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(hosts[0]))
+    backends = ["host", "mmap", "int8"]
+
+    rs = np.random.RandomState(0)
+    rows, metrics = [], {}
+    tmp = tempfile.mkdtemp(prefix="bench-switching-")
+    try:
+        for backend in backends:
+            for n in counts:
+                prompts = rs.randint(0, cfg.vocab_size,
+                                     (n * per_expert, S)).astype(np.int32)
+                prompts[:, 0] = np.arange(n * per_expert) % n
+                per_switch = {}
+                for mode in ("async", "cold"):
+                    store = make_store(
+                        backend, root=f"{tmp}/{backend}-{n}-{mode}")
+                    coe = CompositionOfExperts(
+                        FirstTokenRouter(n), None, int(1.5 * nbytes),
+                        store=store)
+                    for i in range(n):
+                        coe.register(ExpertHandle(f"e{i}", cfg, hosts[i]))
+                    prefetch = mode == "async"
+                    coe.generate(prompts, 2, prefetch_next=prefetch)  # warmup
+                    for e in coe.cache.expert_ids():
+                        coe.cache.drop(e)
+                    coe.cache.stats = type(coe.cache.stats)()
+                    t0 = time.perf_counter()
+                    for _ in range(rounds):
+                        coe.generate(prompts, n_tokens,
+                                     prefetch_next=prefetch)
+                    wall = time.perf_counter() - t0
+                    coe.cache.close()
+                    st = coe.cache.stats
+                    tps = rounds * prompts.shape[0] * n_tokens / wall
+                    switches = st.hits + st.misses
+                    # the per-switch stall where the modes differ: async is
+                    # judged on its prefetched switches, cold on its misses
+                    if mode == "async" and st.prefetch_hits:
+                        per_switch[mode] = (st.stall_prefetch_seconds
+                                            / st.prefetch_hits)
+                    else:
+                        per_switch[mode] = (st.stall_miss_seconds
+                                            / max(st.misses, 1))
+                    rows.append({
+                        "backend": backend, "n_experts": n, "mode": mode,
+                        "wall_s": wall, "tokens_per_s": tps,
+                        "switches": switches,
+                        "switch_stall_s": st.switch_seconds,
+                        "stall_miss_s": st.stall_miss_seconds,
+                        "stall_prefetch_s": st.stall_prefetch_seconds,
+                        "stall_per_switch_ms": 1e3 * per_switch[mode],
+                        "store_read_s": st.store_read_seconds,
+                        "h2d_s": st.h2d_seconds,
+                        "pipeline_overlap": st.overlap_ratio,
+                        "misses": st.misses,
+                        "prefetch_hits": st.prefetch_hits,
+                        "evictions": st.evictions,
+                        "expert_hbm_bytes": nbytes,
+                        "expert_stored_bytes": store.stored_bytes("e0"),
+                    })
+                    emit(f"sweep_switching_{backend}_n{n}_{mode}",
+                         wall * 1e6,
+                         f"tokens/s={tps:.1f},"
+                         f"stall_ms={st.switch_seconds*1e3:.1f},"
+                         f"stall_per_switch_ms={per_switch[mode]*1e3:.1f},"
+                         f"read_ms={st.store_read_seconds*1e3:.1f},"
+                         f"h2d_ms={st.h2d_seconds*1e3:.1f},"
+                         f"prefetch_hits={st.prefetch_hits}")
+                overlap = (1.0 - per_switch["async"] / per_switch["cold"]
+                           if per_switch["cold"] > 0 else 0.0)
+                metrics[f"switching:{backend}:n{n}:overlap_ratio"] = overlap
+                a = next(r for r in rows if r["backend"] == backend
+                         and r["n_experts"] == n and r["mode"] == "async")
+                c = next(r for r in rows if r["backend"] == backend
+                         and r["n_experts"] == n and r["mode"] == "cold")
+                metrics[f"switching:{backend}:n{n}:tps_async_vs_cold"] = (
+                    a["tokens_per_s"] / c["tokens_per_s"])
+                emit(f"sweep_switching_{backend}_n{n}_overlap", 0.0,
+                     f"overlap_ratio={overlap:.2f}_vs_cold_reload")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    RESULTS.mkdir(exist_ok=True)
+    doc = {"schema": 1,
+           "config": {"arch": "samba-coe-expert-7b(reduced)",
+                      "expert_counts": counts, "backends": backends,
+                      "per_expert_prompts": per_expert,
+                      "n_tokens": n_tokens, "rounds": rounds,
+                      "hbm_capacity_experts": 1.5, "tiny": tiny},
+           "rows": rows, "metrics": metrics}
+    (RESULTS / "bench_switching.json").write_text(json.dumps(doc, indent=1))
 
 
 # ----------------------------------------------------------------------
 # Arrival-rate sweep: run-to-completion vs continuous batching (§VI-C)
 # ----------------------------------------------------------------------
-def bench_sweep_arrival():
+def bench_sweep_arrival(tiny: bool = False):
     """Offered-load sweep over the serving engine. One Poisson request trace
     per offered rate (requests/s; ``inf`` = burst, every request queued at
     t=0) is replayed against BOTH schedulers on the same paged KV substrate
@@ -320,13 +459,14 @@ def bench_sweep_arrival():
     # decode-heavy mix (short prompts, long + uneven outputs): the regime
     # where scheduling — not prefill — decides throughput (§VI-C decode).
     rs = np.random.RandomState(0)
-    n_req = 20
+    n_req = 8 if tiny else 20
     prompts = [rs.randint(0, cfg.vocab_size, (10,)).astype(np.int32)
                for _ in range(n_req)]
     new_toks = [int(rs.randint(4, 23)) for _ in range(n_req)]
-    loads = [4.0, 12.0, float("inf")]
-    repeats = 3           # wall time is noisy on shared machines: best-of-N,
-                          # schedulers alternated within each repeat
+    loads = [float("inf")] if tiny else [4.0, 12.0, float("inf")]
+    repeats = 2 if tiny else 3
+    # wall time is noisy on shared machines: best-of-N,
+    # schedulers alternated within each repeat
     traces = {}
     for lam in loads:
         if np.isinf(lam):
@@ -397,6 +537,27 @@ def bench_sweep_arrival():
     emit("sweep_continuous_vs_rtc_highest_load", 0.0,
          f"throughput_ratio={ratio:.2f}x_at_burst")
 
+    RESULTS.mkdir(exist_ok=True)
+    rows = []
+    for (sched, lam), b in best.items():
+        rows.append({"scheduler": sched,
+                     "offered_load": "inf" if np.isinf(lam) else lam,
+                     "wall_s": b["wall"], "tokens_per_s": b["tps"],
+                     "p50_s": float(b["p50"]), "p99_s": float(b["p99"]),
+                     "occupancy": b["occ"], "switches": b["switches"],
+                     "best_of": repeats})
+    metrics = {
+        "arrival:continuous:tps@burst": best[("continuous", hi)]["tps"],
+        "arrival:continuous_vs_rtc_ratio": ratio,
+    }
+    doc = {"schema": 1,
+           "config": {"arch": "samba-coe-expert-7b(reduced)",
+                      "n_requests": n_req, "repeats": repeats,
+                      "loads": ["inf" if np.isinf(l) else l for l in loads],
+                      "tiny": tiny},
+           "rows": rows, "metrics": metrics}
+    (RESULTS / "bench_arrival.json").write_text(json.dumps(doc, indent=1))
+
 
 # ----------------------------------------------------------------------
 def main(argv=None) -> None:
@@ -405,6 +566,12 @@ def main(argv=None) -> None:
     ap.add_argument("--sweep-arrival", action="store_true",
                     help="run ONLY the offered-load serving sweep "
                          "(run-to-completion vs continuous batching)")
+    ap.add_argument("--sweep-switching", action="store_true",
+                    help="run ONLY the Fig-12 switching sweep (expert count "
+                         "x store backend, async prefetch vs cold reload)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized sweep configs (fewer experts/requests/"
+                         "repeats); used by the bench-smoke CI job")
     args = ap.parse_args(argv)
     benches = {
         "table1": bench_table1_intensity,
@@ -415,20 +582,34 @@ def main(argv=None) -> None:
         "tableIV": bench_tableIV_decode_throughput,
         "fig1": bench_fig1_switching_measured,
         "sweep": bench_sweep_arrival,
+        "sweep_switching": bench_sweep_switching,
     }
     print("name,us_per_call,derived")
-    if args.sweep_arrival:
-        bench_sweep_arrival()
+    if args.sweep_arrival or args.sweep_switching:
+        if args.sweep_arrival:
+            bench_sweep_arrival(tiny=args.tiny)
+        if args.sweep_switching:
+            bench_sweep_switching(tiny=args.tiny)
     else:
         for name, fn in benches.items():
             if args.only:
                 if args.only != name:
                     continue
-            elif name == "sweep":
-                continue          # heavy: opt-in via --sweep-arrival
+            elif name in ("sweep", "sweep_switching"):
+                continue          # heavy: opt-in via --sweep-* flags
             fn()
     RESULTS.mkdir(exist_ok=True)
-    (RESULTS / "benchmarks.csv").write_text("\n".join(ROWS) + "\n")
+    csv_path = RESULTS / "benchmarks.csv"
+    if args.sweep_arrival or args.sweep_switching or args.only:
+        # partial runs append (dedup by row name) instead of clobbering
+        old = []
+        if csv_path.exists():
+            new_names = {r.split(",")[0] for r in ROWS}
+            old = [l for l in csv_path.read_text().splitlines()
+                   if l and l.split(",")[0] not in new_names]
+        csv_path.write_text("\n".join(old + ROWS) + "\n")
+    else:
+        csv_path.write_text("\n".join(ROWS) + "\n")
 
 
 if __name__ == "__main__":

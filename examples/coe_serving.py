@@ -12,6 +12,7 @@ baseline the engine replaces.
     PYTHONPATH=src python examples/coe_serving.py --scheduler run_to_completion
 """
 import argparse
+import tempfile
 import time
 
 import jax
@@ -21,6 +22,7 @@ from repro.configs import get_config, reduced
 from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
 from repro.models import get_model
 from repro.serving import Request, ServingEngine
+from repro.store import make_store
 
 
 def main():
@@ -37,6 +39,9 @@ def main():
                     help="slice of the HBM tier reserved for the paged KV "
                     "pool, in units of one expert (0 = size the pool for "
                     "n-slots full-length requests instead)")
+    ap.add_argument("--store", default="host",
+                    help="capacity-tier backend: host | mmap[:dir] | "
+                    "int8[:block] (mmap defaults to a temp dir)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
@@ -51,10 +56,13 @@ def main():
         experts.append(jax.tree.map(np.asarray, p))     # host = "DDR"
     nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
 
+    store = make_store(args.store, root=tempfile.mkdtemp(prefix="coe-store-")
+                       if args.store.startswith("mmap") else None)
     coe = CompositionOfExperts(
         HashRouter(args.n_experts), None,
         hbm_capacity_bytes=int(args.hbm_experts * nbytes),
-        kv_reserve_bytes=int(args.kv_reserve_experts * nbytes))
+        kv_reserve_bytes=int(args.kv_reserve_experts * nbytes),
+        store=store)
     domains = ["code", "math", "translate", "chat", "legal", "medical"]
     for i, host in enumerate(experts):
         coe.register(ExpertHandle(f"expert-{domains[i % len(domains)]}-{i}",
@@ -95,8 +103,14 @@ def main():
           f"mean slot occupancy {st.mean_occupancy:.2f}, "
           f"{st.switches} expert switches")
     print(f"HBM weight cache: hits={cs.hits} misses={cs.misses} "
-          f"evictions={cs.evictions} copied_in={cs.bytes_copied_in>>20}MiB "
+          f"prefetch_hits={cs.prefetch_hits} evictions={cs.evictions} "
+          f"copied_in={cs.bytes_copied_in>>20}MiB "
           f"copyback_elided={cs.bytes_copyback_elided>>20}MiB (read-only)")
+    print(f"prefetch pipeline [{args.store}]: stall {cs.switch_seconds*1e3:.0f}ms "
+          f"of {cs.copy_seconds*1e3:.0f}ms load "
+          f"(store-read {cs.store_read_seconds*1e3:.0f}ms + "
+          f"h2d {cs.h2d_seconds*1e3:.0f}ms), overlap {cs.overlap_ratio:.0%}; "
+          f"capacity tier holds {coe.store.total_stored_bytes()>>20}MiB")
     print(f"paged KV pool: allocs={ps.allocs} frees={ps.frees} "
           f"peak_blocks={ps.peak_blocks} leaked={ps.blocks_in_use}")
     lat = np.array([r.latency_s for r in done]) * 1e3

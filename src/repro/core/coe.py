@@ -26,21 +26,28 @@ from repro.core.memory_tiers import HBMBudget
 from repro.core.switching import HBMWeightCache, tree_bytes
 from repro.models import get_model
 from repro.models.common import param_bytes
+from repro.store import ExpertStore, HostMemoryStore
 
 
 @dataclass
 class ExpertHandle:
     """One expert in the composition. Params live on the capacity tier
-    (host memory = the DDR analogue) until activated."""
+    (the ``ExpertStore``) until activated. ``host_params`` may be None when
+    the expert is already persisted in the composition's store under
+    ``name`` (e.g. an on-disk ``MmapFileStore``)."""
     name: str
     cfg: ModelConfig
-    host_params: Any                  # host-side pytree ("DDR")
+    host_params: Any = None           # host-side pytree, or None if in store
     domain: str = "general"
 
     @functools.cached_property
     def nbytes(self) -> int:
         # params are immutable after registration; the scheduler reads this
-        # every step, so the pytree walk must not repeat
+        # every step, so the pytree walk must not repeat. register() primes
+        # this from the store when host_params is None.
+        if self.host_params is None:
+            raise ValueError(
+                f"expert {self.name}: nbytes unknown before registration")
         return int(sum(np.asarray(x).nbytes
                        for x in jax.tree.leaves(self.host_params)))
 
@@ -58,12 +65,19 @@ class CompositionOfExperts:
     """The Samba-CoE execution engine on the three-tier memory system."""
 
     def __init__(self, router, router_params, hbm_capacity_bytes: int,
-                 sharding=None, kv_reserve_bytes: int = 0):
+                 sharding=None, kv_reserve_bytes: int = 0,
+                 store: Optional[ExpertStore] = None,
+                 max_inflight_prefetch: int = 2):
         """``kv_reserve_bytes`` carves a slice of the HBM tier out of the
         expert weight cache for the serving engine's paged KV pool — the
         explicit resident-experts vs concurrent-requests tradeoff
         (``core.memory_tiers.HBMBudget``). ``self.hbm_budget`` records the
-        split; ``ServingEngine`` sizes its ``PagedKVCache`` from it."""
+        split; ``ServingEngine`` sizes its ``PagedKVCache`` from it.
+
+        ``store`` is the capacity-tier backend holding every expert
+        (``repro.store``): host DRAM by default, mmap-on-disk or
+        int8-quantized for capacities past host memory. The weight cache
+        runs its async prefetch pipeline against it."""
         if not 0 <= kv_reserve_bytes < hbm_capacity_bytes:
             raise ValueError(
                 f"kv_reserve_bytes={kv_reserve_bytes} must be in "
@@ -72,28 +86,48 @@ class CompositionOfExperts:
         self.router_params = router_params   # router lives in HBM (paper Fig 9)
         self.experts: Dict[str, ExpertHandle] = {}
         self._models: Dict[str, Any] = {}
+        self.store = store if store is not None else HostMemoryStore()
         self.hbm_budget = HBMBudget(
             total_bytes=hbm_capacity_bytes,
             weights_bytes=hbm_capacity_bytes - kv_reserve_bytes,
             kv_bytes=kv_reserve_bytes)
         self.cache = HBMWeightCache(
             self.hbm_budget.weights_bytes,
-            fetch=lambda name: self.experts[name].host_params,
+            store=self.store,
             sharding=sharding,
+            max_inflight=max_inflight_prefetch,
         )
 
     # -- registry (the dynamic linker/loader of §V-B) --------------------
     def register(self, handle: ExpertHandle):
         if handle.name in self.experts:
             raise KeyError(f"duplicate expert {handle.name}")
+        if handle.host_params is not None:
+            self.store.put(handle.name, handle.host_params)
+            # the store owns the capacity-tier copy from here on; keeping
+            # the handle's uncompressed pytree referenced would pin it in
+            # DRAM and defeat the mmap/int8 backends' capacity point
+            handle.nbytes      # cached_property: prime the AOT contract
+            handle.host_params = None
+        elif not self.store.contains(handle.name):
+            raise KeyError(
+                f"expert {handle.name}: no host_params given and not "
+                f"present in the capacity-tier store")
+        else:
+            # prime the AOT size contract from the store manifest
+            handle.__dict__["nbytes"] = self.store.nbytes(handle.name)
         self.experts[handle.name] = handle
         self._models[handle.name] = get_model(handle.cfg)
 
     def memory_contract(self, name: str) -> Dict[str, int]:
         """Ahead-of-time footprint declaration (paper: 'each compiled model
-        binary tells us exactly how much HBM and DDR space it requires')."""
+        binary tells us exactly how much HBM and DDR space it requires').
+        ``ddr_bytes`` is what the capacity-tier backend actually occupies —
+        smaller than ``hbm_bytes`` for the int8-quantized store."""
         h = self.experts[name]
-        return {"hbm_bytes": h.nbytes, "ddr_bytes": h.nbytes}
+        ddr = (self.store.stored_bytes(name) if self.store.contains(name)
+               else h.nbytes)
+        return {"hbm_bytes": h.nbytes, "ddr_bytes": ddr}
 
     def expert_names(self) -> List[str]:
         return list(self.experts.keys())

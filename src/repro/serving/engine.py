@@ -498,13 +498,15 @@ class ServingEngine:
                 s.admitted_step for s in occupied[e]))
         if not self.queue:
             return None                  # no slots, no queue: idle
-        # choose from the queue: starving first, then resident, then FIFO
+        # choose from the queue: starving first, then stall-free (resident
+        # OR fully-landed prefetch — admission consults the async pipeline's
+        # readiness, not just residency), then FIFO
         starving = [r for r in self.queue if r.skipped >= self.starvation_limit]
         if starving:
             self.stats.starvation_overrides += 1
             return starving[0].expert
-        resident = [r for r in self.queue if self.coe.cache.resident(r.expert)]
-        pick_from = resident or self.queue
+        ready = [r for r in self.queue if self.coe.cache.ready(r.expert)]
+        pick_from = ready or self.queue
         demand: Dict[str, int] = {}
         for r in pick_from:
             demand[r.expert] = demand.get(r.expert, 0) + 1
@@ -600,8 +602,11 @@ class ServingEngine:
         switch overlaps decode (paper §V-B / Fig 9): the longest-waiting
         foreign batch if one is ready (that is what rotation picks), else
         the most-demanded queued expert (that is what group selection
-        picks). Already resident -> nothing to do; prefetching anything
-        else would just thrash the LRU cache."""
+        picks). The load (store read + H2D copy) runs on the cache's
+        background executor — this call never blocks the decode loop; the
+        switch consumes the in-flight future via ``activate``. Already
+        resident/in-flight -> nothing to do; prefetching anything else
+        would just thrash the LRU cache."""
         waiting: Dict[str, int] = {}
         for s in self.slots:
             if s is not None and s.expert != self._active_expert:

@@ -25,6 +25,7 @@ lanes scatter there so a single compiled step can serve any slot subset.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -39,6 +40,11 @@ class PagedStats:
     frees: int = 0
     blocks_in_use: int = 0
     peak_blocks: int = 0
+
+    def as_dict(self):
+        """Same serialization surface as ``SwitchStats`` — benchmark JSON
+        rows embed both."""
+        return dataclasses.asdict(self)
 
 
 class PagedKVCache:

@@ -1,0 +1,42 @@
+"""Capacity-tier expert store (the paper's DDR tier, §III-B/§V-B).
+
+``ExpertStore`` is the storage contract; three backends ship:
+
+  * ``HostMemoryStore``          — host DRAM, zero-copy reads;
+  * ``MmapFileStore``            — raw tensor file + JSON manifest per
+    expert, mmap-backed demand-paged reads;
+  * ``Int8BlockQuantizedStore``  — int8 absmax block quantization,
+    dequant-on-load, ~2-4x effective capacity.
+
+``core.switching.HBMWeightCache`` runs its double-buffered async prefetch
+pipeline against any of them; ``make_store`` builds one from a CLI-style
+spec string ("host", "mmap:/path", "int8", "int8:32").
+"""
+from repro.store.base import (ExpertStore, HostMemoryStore, StoreStats,
+                              host_tree_bytes)
+from repro.store.disk import MmapFileStore
+from repro.store.quantized import Int8BlockQuantizedStore
+
+
+def make_store(spec: str = "host", *, root=None) -> ExpertStore:
+    """Build a backend from a spec string.
+
+    ``host`` | ``mmap[:root]`` | ``int8[:block_size]``. ``root`` is the
+    directory for ``mmap`` when the spec does not embed one.
+    """
+    kind, _, arg = spec.partition(":")
+    if kind == "host":
+        return HostMemoryStore()
+    if kind == "mmap":
+        path = arg or root
+        if path is None:
+            raise ValueError("mmap store needs a directory: 'mmap:/path'")
+        return MmapFileStore(path)
+    if kind == "int8":
+        return Int8BlockQuantizedStore(int(arg) if arg else 64)
+    raise ValueError(f"unknown store spec {spec!r}")
+
+
+__all__ = ["ExpertStore", "HostMemoryStore", "MmapFileStore",
+           "Int8BlockQuantizedStore", "StoreStats", "host_tree_bytes",
+           "make_store"]

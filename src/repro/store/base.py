@@ -1,0 +1,144 @@
+"""Capacity-tier expert store interface (paper §III-B "DDR", §V-B).
+
+The SN40L's third tier is a terabyte-class DDR store that holds every
+expert of the composition; the HBM tier (``core.switching.HBMWeightCache``)
+caches the active few. This module defines the storage contract the cache
+and the CoE runtime program against:
+
+  * ``put(name, tree)``   — persist one expert's host pytree;
+  * ``get(name)``         — read it back as a host pytree (numpy leaves);
+  * ``nbytes(name)``      — logical bytes as loaded into HBM (the cache's
+    accounting unit — dequantized size for compressed backends);
+  * ``stored_bytes(name)``— bytes the backend actually occupies on the
+    capacity tier (< ``nbytes`` for the int8 backend: that gap IS the
+    paper's "host more experts than DDR naively fits" lever).
+
+Backends: ``HostMemoryStore`` (host DRAM, zero-copy), ``MmapFileStore``
+(raw tensor file + JSON manifest per expert, mmap-backed reads) and
+``Int8BlockQuantizedStore`` (block-quantized int8 + per-block scales,
+dequant-on-load). All are safe for concurrent ``get`` from the prefetch
+executor; ``put``/``delete`` are caller-thread operations.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+import numpy as np
+
+
+@dataclass
+class StoreStats:
+    reads: int = 0
+    writes: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def host_tree_bytes(tree) -> int:
+    """Logical bytes of a host pytree (numpy or jax leaves)."""
+    import jax
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
+
+
+class ExpertStore(abc.ABC):
+    """One expert-per-key blob store over host pytrees."""
+
+    # True when nbytes() answers from metadata without reading the blob —
+    # the prefetch pipeline only pre-reserves HBM for such stores
+    cheap_nbytes = True
+
+    def __init__(self):
+        self.stats = StoreStats()
+        self._stats_lock = threading.Lock()
+
+    def _note_read(self, nbytes: int):
+        """Stat accounting for ``get`` — reads run concurrently on the
+        prefetch executor, so the += must not interleave."""
+        with self._stats_lock:
+            self.stats.reads += 1
+            self.stats.bytes_read += nbytes
+
+    def _note_write(self, nbytes: int):
+        with self._stats_lock:
+            self.stats.writes += 1
+            self.stats.bytes_written += nbytes
+
+    @abc.abstractmethod
+    def put(self, name: str, tree: Any) -> None:
+        ...
+
+    @abc.abstractmethod
+    def get(self, name: str) -> Any:
+        ...
+
+    @abc.abstractmethod
+    def contains(self, name: str) -> bool:
+        ...
+
+    @abc.abstractmethod
+    def delete(self, name: str) -> None:
+        ...
+
+    @abc.abstractmethod
+    def keys(self) -> List[str]:
+        ...
+
+    @abc.abstractmethod
+    def nbytes(self, name: str) -> int:
+        """Bytes of the pytree as ``get`` returns it (HBM-side size)."""
+        ...
+
+    def stored_bytes(self, name: str) -> int:
+        """Bytes occupied on the capacity tier; defaults to ``nbytes``."""
+        return self.nbytes(name)
+
+    # -- conveniences shared by every backend ---------------------------
+    def total_stored_bytes(self) -> int:
+        return sum(self.stored_bytes(n) for n in self.keys())
+
+    def __contains__(self, name: str) -> bool:
+        return self.contains(name)
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+
+class HostMemoryStore(ExpertStore):
+    """In-memory backend: the host-DRAM capacity tier. ``get`` returns the
+    stored tree without copying — the DDR "read" cost is then just the
+    H2D copy, the regime of the paper's own deployment (§VI-C)."""
+
+    def __init__(self):
+        super().__init__()
+        self._trees: Dict[str, Any] = {}
+        self._nbytes: Dict[str, int] = {}
+
+    def put(self, name, tree):
+        self._trees[name] = tree
+        self._nbytes[name] = host_tree_bytes(tree)
+        self._note_write(self._nbytes[name])
+
+    def get(self, name):
+        tree = self._trees[name]
+        self._note_read(self._nbytes[name])
+        return tree
+
+    def contains(self, name):
+        return name in self._trees
+
+    def delete(self, name):
+        del self._trees[name]
+        del self._nbytes[name]
+
+    def keys(self):
+        return list(self._trees.keys())
+
+    def nbytes(self, name):
+        return self._nbytes[name]

@@ -1,0 +1,142 @@
+"""On-disk expert store: one raw tensor file + one JSON manifest per expert.
+
+The file layout is deliberately dumb — every leaf's bytes are appended to
+``<name>.bin`` at a 64-byte-aligned offset and the manifest mirrors the
+pytree structure (nested dicts/lists/tuples) with a tensor record at each
+leaf. ``get`` maps the blob with ``np.memmap`` and returns zero-copy views
+by default, so the actual disk read is demand-paged and overlaps the
+H2D copy the prefetch pipeline issues right after (``eager=True`` forces
+the read up front, which attributes it to the store-read phase timer
+instead of the copy phase).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.store.base import ExpertStore
+
+_ALIGN = 64
+_LEAF_KEY = "__tensor__"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                     # bfloat16 & friends
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(node, blob: List[bytes], offset: int):
+    """Returns (manifest_node, next_offset), appending leaf bytes to blob."""
+    if isinstance(node, dict):
+        man = {}
+        for k in sorted(node):
+            man[k], offset = _flatten(node[k], blob, offset)
+        return man, offset
+    if isinstance(node, (list, tuple)):
+        items = []
+        for x in node:
+            m, offset = _flatten(x, blob, offset)
+            items.append(m)
+        return {"__list__" if isinstance(node, list) else "__tuple__":
+                items}, offset
+    arr = np.asarray(node)
+    pad = (-offset) % _ALIGN
+    if pad:
+        blob.append(b"\0" * pad)
+        offset += pad
+    raw = np.ascontiguousarray(arr).tobytes()
+    blob.append(raw)
+    rec = {_LEAF_KEY: {"offset": offset, "shape": list(arr.shape),
+                       "dtype": arr.dtype.name}}
+    return rec, offset + len(raw)
+
+
+def _unflatten(man, buf: np.ndarray):
+    if _LEAF_KEY in man:
+        rec = man[_LEAF_KEY]
+        dt = _np_dtype(rec["dtype"])
+        n = int(np.prod(rec["shape"])) if rec["shape"] else 1
+        start = rec["offset"]
+        view = buf[start:start + n * dt.itemsize].view(dt)
+        return view.reshape(rec["shape"])
+    if "__list__" in man:
+        return [_unflatten(m, buf) for m in man["__list__"]]
+    if "__tuple__" in man:
+        return tuple(_unflatten(m, buf) for m in man["__tuple__"])
+    return {k: _unflatten(v, buf) for k, v in man.items()}
+
+
+class MmapFileStore(ExpertStore):
+    """Raw-file capacity tier. Supports nested dict/list/tuple pytrees with
+    array leaves — exactly the shape of this repo's model params."""
+
+    def __init__(self, root, *, eager: bool = False):
+        super().__init__()
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.eager = eager
+        self._meta: Dict[str, dict] = {}     # manifest cache
+        for mf in self.root.glob("*.json"):
+            self._meta[mf.stem] = json.loads(mf.read_text())
+
+    def _paths(self, name: str):
+        return self.root / f"{name}.bin", self.root / f"{name}.json"
+
+    def put(self, name, tree):
+        blob: List[bytes] = []
+        man, total = _flatten(tree, blob, 0)
+        bin_path, man_path = self._paths(name)
+        with open(bin_path, "wb") as f:
+            for chunk in blob:
+                f.write(chunk)
+        doc = {"manifest": man, "total_bytes": total,
+               "nbytes": _manifest_nbytes(man)}
+        man_path.write_text(json.dumps(doc))
+        self._meta[name] = doc
+        self._note_write(total)
+
+    def get(self, name):
+        doc = self._meta[name]
+        bin_path, _ = self._paths(name)
+        buf = np.memmap(bin_path, dtype=np.uint8, mode="r")
+        tree = _unflatten(doc["manifest"], buf)
+        if self.eager:
+            import jax
+            tree = jax.tree.map(np.array, tree)
+        self._note_read(doc["nbytes"])
+        return tree
+
+    def contains(self, name):
+        return name in self._meta
+
+    def delete(self, name):
+        bin_path, man_path = self._paths(name)
+        bin_path.unlink(missing_ok=True)
+        man_path.unlink(missing_ok=True)
+        self._meta.pop(name, None)
+
+    def keys(self):
+        return list(self._meta.keys())
+
+    def nbytes(self, name):
+        return self._meta[name]["nbytes"]
+
+    def stored_bytes(self, name):
+        return self._meta[name]["total_bytes"]
+
+
+def _manifest_nbytes(man) -> int:
+    if _LEAF_KEY in man:
+        rec = man[_LEAF_KEY]
+        n = int(np.prod(rec["shape"])) if rec["shape"] else 1
+        return n * _np_dtype(rec["dtype"]).itemsize
+    if "__list__" in man or "__tuple__" in man:
+        return sum(_manifest_nbytes(m)
+                   for m in man.get("__list__", man.get("__tuple__")))
+    return sum(_manifest_nbytes(v) for v in man.values())

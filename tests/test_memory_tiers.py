@@ -1,0 +1,110 @@
+"""Property tests for the static allocator + placement planner of
+``core/memory_tiers.py`` (paper §V-A): lifetime-disjoint address sharing
+never overlaps two *live* symbols, and the spill decisions of
+``plan_placement`` follow the bandwidth-aware ``transfer_footprint``
+ordering exactly (ISSUE-4 satellite)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Symbol, allocate_static, plan_hbm_budget,
+                        plan_placement, spill_order)
+
+ALIGN = 512
+
+
+@st.composite
+def _symbols(draw):
+    """Dense lifetimes + mixed sizes: maximizes address-sharing pressure."""
+    n = draw(st.integers(2, 16))
+    syms = []
+    for i in range(n):
+        first = draw(st.integers(0, 6))
+        last = first + draw(st.integers(0, 4))
+        size = draw(st.integers(1, 1 << 14))
+        # distinct footprints so the expected spill order is unambiguous
+        foot = draw(st.integers(0, 1 << 16)) * n + i
+        syms.append(Symbol(f"s{i}", size, first, last,
+                           transfer_footprint=foot))
+    return syms
+
+
+def _rounded(size):
+    return (size + ALIGN - 1) // ALIGN * ALIGN
+
+
+@given(_symbols())
+@settings(max_examples=80, deadline=None)
+def test_allocate_static_never_overlaps_live_lifetimes(syms):
+    alloc = allocate_static(syms, align=ALIGN)
+    spans = {s.name: (alloc.offsets[s.name],
+                      alloc.offsets[s.name] + _rounded(s.size)) for s in syms}
+    for i, a in enumerate(syms):
+        for b in syms[i + 1:]:
+            if a.last_use < b.first_use or b.last_use < a.first_use:
+                continue                       # disjoint lifetimes may share
+            (a0, a1), (b0, b1) = spans[a.name], spans[b.name]
+            assert a1 <= b0 or b1 <= a0, (
+                f"live overlap: {a.name}{spans[a.name]} vs "
+                f"{b.name}{spans[b.name]}")
+    assert alloc.peak <= sum(_rounded(s.size) for s in syms)
+    assert all(off % ALIGN == 0 for off in alloc.offsets.values())
+
+
+@given(_symbols(), st.integers(0, 1 << 15))
+@settings(max_examples=80, deadline=None)
+def test_plan_placement_spills_in_transfer_footprint_order(syms, cap_kib):
+    hbm_capacity = cap_kib * 4                 # sweeps none..all spilled
+    alloc, spilled = plan_placement(syms, hbm_capacity, align=ALIGN)
+    assert alloc.peak <= hbm_capacity or not spilled or (
+        len(spilled) == len(syms))             # everything spilled: peak 0
+    if len(spilled) == len(syms):
+        assert alloc.peak == 0
+    # the spill sequence is EXACTLY the lowest-transfer-footprint prefix —
+    # weights (high reuse) stay in HBM, low-reuse intermediates go first
+    expected = [s.name for s in spill_order(syms)]
+    assert spilled == expected[: len(spilled)]
+    # every resident symbol out-ranks every spilled one by footprint
+    by_name = {s.name: s for s in syms}
+    resident = [n for n in alloc.offsets if n not in spilled]
+    if spilled and resident:
+        max_spilled = max(by_name[n].transfer_footprint for n in spilled)
+        min_resident = min(by_name[n].transfer_footprint for n in resident)
+        assert max_spilled <= min_resident
+
+
+@given(_symbols())
+@settings(max_examples=40, deadline=None)
+def test_plan_placement_resident_allocation_stays_disjoint(syms):
+    """Spilling must not break the allocator invariant for what remains."""
+    cap = _rounded(max(s.size for s in syms)) * 2
+    alloc, spilled = plan_placement(syms, cap, align=ALIGN)
+    live = [s for s in syms if s.name not in spilled]
+    spans = {s.name: (alloc.offsets[s.name],
+                      alloc.offsets[s.name] + _rounded(s.size)) for s in live}
+    for i, a in enumerate(live):
+        for b in live[i + 1:]:
+            if a.last_use < b.first_use or b.last_use < a.first_use:
+                continue
+            (a0, a1), (b0, b1) = spans[a.name], spans[b.name]
+            assert a1 <= b0 or b1 <= a0
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 4),
+       st.integers(0, 10))
+@settings(max_examples=60, deadline=None)
+def test_plan_hbm_budget_invariants(total_mb, expert_mb, block_kb, kv_tenths):
+    MB, KB = 1 << 20, 1 << 10
+    total, expert, block = total_mb * MB, expert_mb * MB, block_kb * KB
+    kv_fraction = kv_tenths / 10.0
+    feasible = total >= 2 * expert + block
+    if not feasible:
+        with pytest.raises(MemoryError):
+            plan_hbm_budget(total, expert, block, kv_fraction=kv_fraction)
+        return
+    b = plan_hbm_budget(total, expert, block, kv_fraction=kv_fraction)
+    assert b.weights_bytes + b.kv_bytes == b.total_bytes == total
+    assert b.kv_bytes >= block                 # at least one KV block
+    assert b.weights_bytes >= 2 * expert       # active + prefetch target
+    assert b.resident_experts(expert) >= 2

@@ -1,0 +1,105 @@
+"""CI benchmark-regression gate.
+
+Compares the flat ``metrics`` dict of one or more benchmark result JSONs
+(``results/bench_arrival.json``, ``results/bench_switching.json`` — written
+by ``benchmarks/run.py --sweep-arrival / --sweep-switching``) against the
+committed reference in ``benchmarks/baseline.json``. Every metric is
+higher-is-better (throughput, overlap ratios); the gate fails when
+
+    current < baseline_value * (1 - threshold)
+
+i.e. a >``threshold`` regression (default 30%). Baseline entries are either
+a bare number or ``{"value": x, "threshold": y}`` for a per-metric band.
+A baseline metric missing from the results is a failure too — a silently
+dropped benchmark must not pass the gate.
+
+    python tools/check_bench.py [--baseline benchmarks/baseline.json]
+        [--threshold 0.30] results/bench_arrival.json results/bench_switching.json
+
+Exit code 0 = pass, 1 = regression/missing metric, 2 = bad invocation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_metrics(paths):
+    merged = {}
+    for p in paths:
+        doc = json.loads(Path(p).read_text())
+        metrics = doc.get("metrics", {})
+        dup = set(metrics) & set(merged)
+        if dup:
+            raise SystemExit(f"duplicate metric keys across inputs: {dup}")
+        merged.update(metrics)
+    return merged
+
+
+def check(current: dict, baseline: dict, threshold: float):
+    """Returns (failures, lines): failure strings + a full report."""
+    failures, lines = [], []
+    for name, ref in sorted(baseline.items()):
+        if isinstance(ref, dict):
+            ref_value, band = float(ref["value"]), float(
+                ref.get("threshold", threshold))
+        else:
+            ref_value, band = float(ref), threshold
+        floor = ref_value * (1.0 - band)
+        if name not in current:
+            failures.append(f"MISSING  {name}: not in results "
+                            f"(baseline {ref_value:g})")
+            continue
+        cur = float(current[name])
+        verdict = "ok" if cur >= floor else "REGRESSION"
+        lines.append(f"{verdict:10s} {name}: {cur:.3f} "
+                     f"(baseline {ref_value:g}, floor {floor:.3f}, "
+                     f"band {band:.0%})")
+        if cur < floor:
+            failures.append(lines[-1])
+    extra = sorted(set(current) - set(baseline))
+    for name in extra:
+        lines.append(f"{'untracked':10s} {name}: {float(current[name]):.3f} "
+                     f"(no baseline entry)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", nargs="+",
+                    help="benchmark result JSONs with a 'metrics' dict")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed fractional regression (default 0.30)")
+    args = ap.parse_args(argv)
+
+    try:
+        base_doc = json.loads(Path(args.baseline).read_text())
+    except FileNotFoundError as e:
+        print(f"check_bench: missing baseline file: {e.filename}")
+        return 2
+    baseline = base_doc["metrics"] if "metrics" in base_doc else base_doc
+    try:
+        current = load_metrics(args.results)
+    except FileNotFoundError as e:
+        print(f"check_bench: missing results file: {e.filename}")
+        return 2
+
+    failures, lines = check(current, baseline, args.threshold)
+    print(f"check_bench: {len(baseline)} gated metrics, "
+          f"{len(failures)} failure(s)")
+    for line in lines:
+        print("  " + line)
+    if failures:
+        print("\ncheck_bench: FAILED —")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print("check_bench: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
