@@ -27,6 +27,20 @@ RESULTS = Path(__file__).resolve().parent.parent / "results"
 ROWS = []
 
 
+def _results_dir() -> Path:
+    """``results/`` is gitignored and may not exist on a fresh clone —
+    every writer creates it on demand."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    return RESULTS
+
+
+def _ensure_host_devices(n: int):
+    """The node sweep emulates ``n`` sockets; this must run before anything
+    initializes the JAX backend (importing repro.node does not)."""
+    from repro.node.topology import ensure_emulated_sockets
+    ensure_emulated_sockets(n)
+
+
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
@@ -413,7 +427,6 @@ def bench_sweep_switching(tiny: bool = False):
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
-    RESULTS.mkdir(exist_ok=True)
     doc = {"schema": 1,
            "config": {"arch": "samba-coe-expert-7b(reduced)",
                       "expert_counts": counts, "backends": backends,
@@ -421,7 +434,8 @@ def bench_sweep_switching(tiny: bool = False):
                       "n_tokens": n_tokens, "rounds": rounds,
                       "hbm_capacity_experts": 1.5, "tiny": tiny},
            "rows": rows, "metrics": metrics}
-    (RESULTS / "bench_switching.json").write_text(json.dumps(doc, indent=1))
+    (_results_dir() / "bench_switching.json").write_text(
+        json.dumps(doc, indent=1))
 
 
 # ----------------------------------------------------------------------
@@ -537,7 +551,6 @@ def bench_sweep_arrival(tiny: bool = False):
     emit("sweep_continuous_vs_rtc_highest_load", 0.0,
          f"throughput_ratio={ratio:.2f}x_at_burst")
 
-    RESULTS.mkdir(exist_ok=True)
     rows = []
     for (sched, lam), b in best.items():
         rows.append({"scheduler": sched,
@@ -556,7 +569,118 @@ def bench_sweep_arrival(tiny: bool = False):
                       "loads": ["inf" if np.isinf(l) else l for l in loads],
                       "tiny": tiny},
            "rows": rows, "metrics": metrics}
-    (RESULTS / "bench_arrival.json").write_text(json.dumps(doc, indent=1))
+    (_results_dir() / "bench_arrival.json").write_text(
+        json.dumps(doc, indent=1))
+
+
+# ----------------------------------------------------------------------
+# Node sweep: tokens/s + latency vs socket-group shape (Table V analogue)
+# ----------------------------------------------------------------------
+def bench_sweep_node(tiny: bool = False):
+    """Multi-socket node sweep over socket-group shapes (TP x groups: 8x1,
+    4x2, 2x4, 1x8) on 8 emulated CPU sockets, at saturating offered load
+    (every request queued at t=0) — the Table V footprint/throughput
+    analogue. One fixed request trace and one expert set (padded once for
+    TP=8 so every shape runs the *same* model) replay against each shape;
+    total decode slots are held constant across shapes. Reports achieved
+    tokens/s, p50/p99 latency, inter-group imbalance and switch stalls, and
+    emits ``results/bench_node.json`` with flat metrics — the headline is
+    ``node:multi_vs_1group_tps``, multi-group throughput over the single
+    TP=8 group, which must stay strictly above 1 (gated in CI)."""
+    _ensure_host_devices(8)    # covers --sweep-node AND --only sweep_node
+    from repro.configs import get_config, pad_for_tp, reduced
+    from repro.core import HashRouter
+    from repro.core.switching import SwitchStats
+    from repro.models import get_model
+    from repro.node import make_node_topology, RDUNode
+    from repro.serving import Request
+    from repro.serving.engine import ServeStats
+
+    shapes = [(8, 1), (4, 2), (2, 4), (1, 8)]
+    n_exp = 4 if tiny else 6
+    n_req = 12 if tiny else 32
+    total_slots = 8
+    S = 8
+    cfg = pad_for_tp(reduced(get_config("samba-coe-expert-7b")), 8)
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    experts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+               for i in range(n_exp)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+    rs = np.random.RandomState(0)
+    trace = [(i, rs.randint(0, cfg.vocab_size, (S,)).astype(np.int32),
+              int(rs.randint(4, 9 if tiny else 13))) for i in range(n_req)]
+
+    rows, metrics = [], {}
+    for tp, n_groups in shapes:
+        topo = make_node_topology(tp, n_groups)
+        node = RDUNode(topo, cfg, HashRouter(n_exp), None,
+                       group_hbm_bytes=int(3.0 * nbytes),
+                       group_kv_reserve_bytes=int(0.8 * nbytes),
+                       n_slots=max(1, total_slots // n_groups),
+                       block_size=8, max_len=S + (16 if tiny else 20))
+        for i, h in enumerate(experts):
+            node.register_expert(f"e{i}", h)
+        placement = node.plan()
+        # warm every group's compile cache outside the timed window
+        for w, gs in enumerate(node.groups):
+            gs.engine.submit(Request(
+                rid=100_000 + w, tokens=np.zeros(S, np.int32),
+                max_new_tokens=2, expert=node.expert_names()[0]))
+        node.drain()
+        for gs in node.groups:
+            gs.engine.stats = ServeStats()
+            gs.coe.cache.stats = SwitchStats()
+            gs.submitted = 0
+        node.route_s = 0.0
+
+        t0 = time.perf_counter()
+        for rid, toks, n_new in trace:
+            node.submit(Request(rid=rid, tokens=toks, max_new_tokens=n_new))
+        done = node.drain()
+        wall = time.perf_counter() - t0
+        node.close()
+        st = node.stats()
+        lat = np.array([r.latency_s for r in done])
+        tps = st.tokens_out / wall
+        name = topo.name
+        rows.append({
+            "shape": name, "tp": tp, "n_groups": n_groups,
+            "wall_s": wall, "tokens_per_s": tps,
+            "p50_s": float(np.percentile(lat, 50)),
+            "p99_s": float(np.percentile(lat, 99)),
+            "imbalance": st.imbalance,
+            "switch_stall_s": st.switch_stall_s,
+            "starvation_overrides": st.starvation_overrides,
+            "spilled_experts": len(placement.spilled),
+            "group_hbm_bytes": int(3.0 * nbytes),
+            "resident_experts_per_group":
+                node.groups[0].coe.hbm_budget.resident_experts(nbytes),
+            "per_group_tokens": [g["tokens_out"] for g in st.per_group],
+        })
+        metrics[f"node:{name}:tokens_per_s"] = tps
+        emit(f"sweep_node_{name}", wall * 1e6,
+             f"tokens/s={tps:.1f},p50_ms={rows[-1]['p50_s']*1e3:.0f},"
+             f"p99_ms={rows[-1]['p99_s']*1e3:.0f},"
+             f"imbalance={st.imbalance:.2f},"
+             f"stall_ms={st.switch_stall_s*1e3:.0f}")
+
+    one_group = next(r for r in rows if r["n_groups"] == 1)
+    multi_best = max((r for r in rows if r["n_groups"] > 1),
+                     key=lambda r: r["tokens_per_s"])
+    ratio = multi_best["tokens_per_s"] / one_group["tokens_per_s"]
+    metrics["node:multi_vs_1group_tps"] = ratio
+    emit("sweep_node_multi_vs_1group", 0.0,
+         f"throughput_ratio={ratio:.2f}x_best={multi_best['shape']}"
+         f"_vs_{one_group['shape']}_at_burst")
+
+    doc = {"schema": 1,
+           "config": {"arch": "samba-coe-expert-7b(reduced,pad_tp8)",
+                      "shapes": [f"{t}x{g}" for t, g in shapes],
+                      "n_experts": n_exp, "n_requests": n_req,
+                      "total_slots": total_slots, "tiny": tiny},
+           "rows": rows, "metrics": metrics}
+    (_results_dir() / "bench_node.json").write_text(json.dumps(doc, indent=1))
 
 
 # ----------------------------------------------------------------------
@@ -569,10 +693,19 @@ def main(argv=None) -> None:
     ap.add_argument("--sweep-switching", action="store_true",
                     help="run ONLY the Fig-12 switching sweep (expert count "
                          "x store backend, async prefetch vs cold reload)")
+    ap.add_argument("--sweep-node", action="store_true",
+                    help="run ONLY the multi-socket node sweep (tokens/s + "
+                         "latency vs socket-group shape on 8 emulated "
+                         "sockets)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized sweep configs (fewer experts/requests/"
                          "repeats); used by the bench-smoke CI job")
     args = ap.parse_args(argv)
+    if args.sweep_node:
+        # before ANY sweep dispatches: a combined invocation (e.g.
+        # --sweep-arrival --sweep-node) must not let the earlier sweep
+        # initialize the backend with too few devices
+        _ensure_host_devices(8)
     benches = {
         "table1": bench_table1_intensity,
         "fig10": bench_fig10_fusion_speedup,
@@ -583,24 +716,27 @@ def main(argv=None) -> None:
         "fig1": bench_fig1_switching_measured,
         "sweep": bench_sweep_arrival,
         "sweep_switching": bench_sweep_switching,
+        "sweep_node": bench_sweep_node,
     }
     print("name,us_per_call,derived")
-    if args.sweep_arrival or args.sweep_switching:
+    any_sweep = args.sweep_arrival or args.sweep_switching or args.sweep_node
+    if any_sweep:
         if args.sweep_arrival:
             bench_sweep_arrival(tiny=args.tiny)
         if args.sweep_switching:
             bench_sweep_switching(tiny=args.tiny)
+        if args.sweep_node:
+            bench_sweep_node(tiny=args.tiny)
     else:
         for name, fn in benches.items():
             if args.only:
                 if args.only != name:
                     continue
-            elif name in ("sweep", "sweep_switching"):
+            elif name in ("sweep", "sweep_switching", "sweep_node"):
                 continue          # heavy: opt-in via --sweep-* flags
             fn()
-    RESULTS.mkdir(exist_ok=True)
-    csv_path = RESULTS / "benchmarks.csv"
-    if args.sweep_arrival or args.sweep_switching or args.only:
+    csv_path = _results_dir() / "benchmarks.csv"
+    if any_sweep or args.only:
         # partial runs append (dedup by row name) instead of clobbering
         old = []
         if csv_path.exists():

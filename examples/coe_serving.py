@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--store", default="host",
                     help="capacity-tier backend: host | mmap[:dir] | "
                     "int8[:block] (mmap defaults to a temp dir)")
+    ap.add_argument("--tagged-fraction", type=float, default=0.25,
+                    help="fraction of requests submitted with a caller "
+                    "tag (expert pinned by the client); the rest arrive "
+                    "expert=None and are routed by the composition's "
+                    "router at submit")
     args = ap.parse_args()
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
@@ -73,10 +78,16 @@ def main():
     rs = np.random.RandomState(0)
 
     # staggered trace: half the requests queued up-front, the rest submitted
-    # while the engine is already decoding (continuous admission at work)
+    # while the engine is already decoding (continuous admission at work).
+    # A --tagged-fraction arrive caller-tagged (client pinned an expert);
+    # the rest are expert=None and get routed at submit (§II).
+    names = coe.expert_names()
+    n_tagged = int(args.requests * args.tagged_fraction)
     reqs = [Request(
         rid=i, tokens=rs.randint(0, cfg.vocab_size, (16,)).astype(np.int32),
-        max_new_tokens=int(rs.randint(4, 13))) for i in range(args.requests)]
+        max_new_tokens=int(rs.randint(4, 13)),
+        expert=names[i % len(names)] if i < n_tagged else None)
+        for i in range(args.requests)]
     upfront, late = reqs[: args.requests // 2], reqs[args.requests // 2:]
     t0 = time.perf_counter()
     for r in upfront:
@@ -119,7 +130,8 @@ def main():
     by_expert = {}
     for r in done:
         by_expert[r.expert] = by_expert.get(r.expert, 0) + 1
-    print("requests per expert:", by_expert)
+    print(f"requests per expert ({n_tagged} caller-tagged, "
+          f"{len(done) - n_tagged} router-routed):", by_expert)
 
 
 if __name__ == "__main__":

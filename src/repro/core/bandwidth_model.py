@@ -59,6 +59,22 @@ def switch_cost(expert_bytes: int, machine: MachineTiers) -> float:
     return expert_bytes / machine.copy_bw_node
 
 
+def expert_service_cost(expert_bytes: int, requests: float,
+                        machine: MachineTiers, *, tp: int = 1,
+                        avg_tokens: int = 16, resident: bool = True,
+                        dtype_bytes: int = 2) -> float:
+    """First-order seconds to serve ``requests`` requests of one expert on a
+    ``tp``-socket group: decode execution (memory-bound step model) plus, for
+    a non-resident expert, one capacity-tier -> HBM copy per activation.
+    ``node/placement.py`` balances socket groups on this cost — per-socket
+    *bandwidth*, not FLOPs, drives the assignment (arXiv 2403.14123)."""
+    n_params = max(expert_bytes // dtype_bytes, 1)
+    step = decode_step_cost(n_params, 0, 1, machine, tp=tp).step_s
+    exec_s = requests * avg_tokens * step
+    miss_s = 0.0 if resident else requests * switch_cost(expert_bytes, machine)
+    return exec_s + miss_s
+
+
 def coe_latency(n_experts_used: int, expert_bytes: int, resident_experts: int,
                 decode_cost: StepCost, n_tokens: int, machine: MachineTiers,
                 router_cost_s: float = 0.0) -> Dict[str, float]:

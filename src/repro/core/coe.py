@@ -137,6 +137,16 @@ class CompositionOfExperts:
         idx = self.router.route(self.router_params, tokens)
         return np.asarray(jax.device_get(idx))
 
+    def route_request(self, tokens) -> tuple:
+        """Route ONE request's prompt ``(S,)`` to an expert name; returns
+        ``(name, seconds)`` so callers (engine submit, node dispatch) can
+        account routing time. The single route-once implementation both
+        serving front-ends share."""
+        t0 = time.perf_counter()
+        names = self.expert_names()
+        e = int(self.route(np.asarray(tokens)[None])[0]) % len(names)
+        return names[e], time.perf_counter() - t0
+
     def generate(self, tokens: np.ndarray, n_tokens: int, *,
                  prefetch_next: bool = True) -> GenerationResult:
         """tokens (B,S) int32. Each prompt may route to a different expert;

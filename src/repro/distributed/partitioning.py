@@ -150,6 +150,20 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh) -> Any:
     raise KeyError(cfg.family)
 
 
+def paged_pool_pspec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for the serving-time paged KV pool, layout
+    ``(layers, rows, block, kv_heads, head_dim)`` (serving/kvcache.py).
+
+    Same rule as ``cache_pspecs`` for the dense cache: shard the kv-head dim
+    over 'model' when it divides, else replicate (GQA kv < tp replicates the
+    small KV rather than inflating the pool — see module docstring)."""
+    m = "model" if "model" in mesh.axis_names else None
+    msize = _mesh_size(mesh, "model") if m else 1
+    kv = m if (m and cfg.n_kv_heads % msize == 0
+               and cfg.n_kv_heads >= msize) else None
+    return P(None, None, None, kv, None)
+
+
 def cache_layer_pspecs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
     """Per-layer cache-slice pspecs (leading layer/group dim stripped) for
     the in-scan sharding constraints (ctx.named_shardings)."""

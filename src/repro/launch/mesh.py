@@ -32,5 +32,15 @@ def make_mesh(shape, axes) -> Mesh:
     return _mk(shape, axes)
 
 
+def make_device_mesh(shape, axes, devices) -> Mesh:
+    """Mesh over an explicit device subset (unlike ``jax.make_mesh``, which
+    always grabs the whole process device list). The node topology uses this
+    to carve one host's devices into independent socket-group meshes."""
+    import numpy as np
+
+    arr = np.asarray(devices, dtype=object).reshape(tuple(shape))
+    return Mesh(arr, tuple(axes))
+
+
 def single_device_mesh() -> Mesh:
     return make_mesh((1, 1), ("data", "model"))

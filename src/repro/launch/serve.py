@@ -2,88 +2,101 @@
 
 Builds a Samba-CoE-style composition (router + N experts derived from one
 backbone config), loads all experts on the capacity tier (host DRAM = the
-paper's DDR), and serves batched requests through the continuous-batching engine over
-the three-tier switching engine and paged KV pool. Reports the paper's Fig-1 breakdown (switch vs execute) and cache
-statistics.
+paper's DDR), and serves batched requests through the continuous-batching
+engine over the three-tier switching engine and paged KV pool. Reports the
+paper's Fig-1 breakdown (switch vs execute) and cache statistics.
+
+Requests demonstrate both routing paths: most arrive untagged
+(``expert=None``) and are routed by the composition's router at submit;
+a ``--tagged-fraction`` of them arrive caller-tagged and keep their tag.
+
+``--node-shape TPxG`` serves through a multi-socket RDU node instead
+(``repro.node``): TP x G socket groups emulated on CPU devices, e.g.
+
+    python -m repro.launch.serve --node-shape 2x4 --reduced
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.configs import get_config, reduced
-from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
-from repro.models import get_model
-from repro.serving import Request, ServingEngine
 
 
 def build_coe(cfg, n_experts: int, hbm_experts: float, seed: int = 0):
     """Create n_experts fine-tune-style variants of one backbone (the paper
     derives all 150 experts from Llama2-7B). ``hbm_experts`` is the HBM
     tier capacity in units of one expert."""
+    from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+
+    hosts, nbytes = build_experts(cfg, n_experts, seed)
+    coe = CompositionOfExperts(
+        HashRouter(n_experts), None,
+        hbm_capacity_bytes=int(max(1.0, hbm_experts) * nbytes))
+    for name, host, domain in hosts:
+        coe.register(ExpertHandle(name, cfg, host, domain=domain))
+    return coe, nbytes
+
+
+def build_experts(cfg, n_experts: int, seed: int = 0):
+    """Host-side expert pytrees: cheap fine-tune stand-ins (per-expert
+    perturbations of one base init)."""
+    import jax
+    from repro.models import get_model
+
     model = get_model(cfg)
     rng = jax.random.PRNGKey(seed)
     base = model.init(rng)
     host_base = jax.tree.map(np.asarray, base)
     nbytes = sum(x.nbytes for x in jax.tree.leaves(host_base))
-    coe = CompositionOfExperts(
-        HashRouter(n_experts), None,
-        hbm_capacity_bytes=int(max(1.0, hbm_experts) * nbytes))
     domains = ["code", "math", "translate", "chat", "legal", "medical"]
+    out = []
     for i in range(n_experts):
-        # cheap fine-tune stand-in: per-expert perturbation of the base
         rs = np.random.RandomState(i)
         pert = jax.tree.map(
             lambda x: (x + (rs.standard_normal(x.shape) * 0.01).astype(x.dtype))
             if x.dtype in (np.float32, np.float16) or x.dtype.str == "<V2"
             else x, host_base)
-        coe.register(ExpertHandle(f"expert{i:03d}", cfg, pert,
-                                  domain=domains[i % len(domains)]))
-    return coe, nbytes
+        out.append((f"expert{i:03d}", pert, domains[i % len(domains)]))
+    return out, nbytes
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="samba-coe-expert-7b")
-    ap.add_argument("--n-experts", type=int, default=8)
-    ap.add_argument("--hbm-experts", type=float, default=2.5,
-                    help="HBM tier capacity in units of one expert")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--n-slots", type=int, default=8)
-    ap.add_argument("--scheduler", default="continuous",
-                    choices=["continuous", "run_to_completion"])
-    ap.add_argument("--reduced", action="store_true")
-    args = ap.parse_args(argv)
+def _make_requests(args, cfg, expert_names):
+    """Request list, ``--tagged-fraction`` of them caller-tagged round-robin
+    (the rest routed by the composition at submit)."""
+    from repro.serving import Request
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
+    rs = np.random.RandomState(0)
+    n_tagged = int(args.requests * args.tagged_fraction)
+    reqs = []
+    for i in range(args.requests):
+        tag = expert_names[i % len(expert_names)] if i < n_tagged else None
+        reqs.append(Request(
+            rid=i,
+            tokens=rs.randint(0, cfg.vocab_size,
+                              (args.prompt_len,)).astype(np.int32),
+            max_new_tokens=args.new_tokens, expert=tag))
+    return reqs, n_tagged
+
+
+def _serve_single(args, cfg):
+    from repro.serving import ServingEngine
 
     coe, nbytes = build_coe(cfg, args.n_experts, args.hbm_experts)
     engine = ServingEngine(coe, cfg,
                            max_len=args.prompt_len + args.new_tokens,
                            n_slots=args.n_slots, block_size=8,
                            scheduler=args.scheduler)
-
-    rs = np.random.RandomState(0)
-    for i in range(args.requests):
-        engine.submit(Request(
-            rid=i,
-            tokens=rs.randint(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32),
-            max_new_tokens=args.new_tokens))
-
+    reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
     done = engine.drain()
     wall = time.perf_counter() - t0
     st = engine.stats
     print(f"served {len(done)} requests in {wall:.2f}s "
-          f"({st.tokens_out} tokens, {st.tokens_per_second:.1f} tok/s)")
+          f"({st.tokens_out} tokens, {st.tokens_per_second:.1f} tok/s); "
+          f"{n_tagged} caller-tagged, {len(done) - n_tagged} router-routed")
     print(f"breakdown: route={st.route_s:.3f}s switch={st.switch_s:.3f}s "
           f"prefill={st.prefill_s:.3f}s decode={st.exec_s:.3f}s "
           f"(paper Fig-1 split)")
@@ -92,6 +105,84 @@ def main(argv=None):
     print(f"weight cache: {coe.cache.stats}")
     print(f"kv pool: {engine.pool.stats}")
     return engine
+
+
+def _serve_node(args, cfg):
+    from repro.core import HashRouter
+    from repro.node import make_node_topology, RDUNode
+
+    tp, n_groups = (int(x) for x in args.node_shape.split("x"))
+    topo = make_node_topology(tp, n_groups)
+    hosts, nbytes = build_experts(cfg, args.n_experts)
+    node = RDUNode(topo, cfg, HashRouter(args.n_experts), None,
+                   group_hbm_bytes=int(max(1.0, args.hbm_experts) * nbytes),
+                   group_kv_reserve_bytes=int(0.8 * nbytes),
+                   n_slots=max(1, args.n_slots // n_groups), block_size=8,
+                   max_len=args.prompt_len + args.new_tokens,
+                   scheduler=args.scheduler)
+    for name, host, domain in hosts:
+        node.register_expert(name, host, domain=domain)
+    placement = node.plan()
+    reqs, n_tagged = _make_requests(args, cfg, node.expert_names())
+    t0 = time.perf_counter()
+    for r in reqs:
+        node.submit(r)
+    done = node.drain()
+    wall = time.perf_counter() - t0
+    st = node.stats()
+    print(f"[node {topo.name}] served {len(done)} requests in {wall:.2f}s "
+          f"({st.tokens_out} tokens, {st.tokens_per_second(wall):.1f} tok/s);"
+          f" {n_tagged} caller-tagged, {len(done) - n_tagged} router-routed")
+    print(f"route={st.route_s:.3f}s switch_stall={st.switch_stall_s:.3f}s "
+          f"imbalance={st.imbalance:.2f} "
+          f"spilled_experts={len(placement.spilled)}")
+    for g in st.per_group:
+        print(f"  group {g['gid']} (tp={g['tp']}): {g['requests']} req / "
+              f"{g['tokens_out']} tok, occupancy {g['occupancy']:.2f}, "
+              f"{g['switches']} switches, cache h/m "
+              f"{g['cache_hits']}/{g['cache_misses']}")
+    node.close()
+    return node
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="samba-coe-expert-7b")
+    ap.add_argument("--n-experts", type=int, default=8)
+    ap.add_argument("--hbm-experts", type=float, default=2.5,
+                    help="HBM tier capacity in units of one expert "
+                    "(per socket group in --node-shape mode)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=8,
+                    help="decode slots (split across groups in node mode)")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "run_to_completion"])
+    ap.add_argument("--tagged-fraction", type=float, default=0.25,
+                    help="fraction of requests submitted caller-tagged; "
+                    "the rest are routed by the composition's router")
+    ap.add_argument("--node-shape", default=None, metavar="TPxG",
+                    help="serve through a TP x G socket-group RDU node "
+                    "(e.g. 2x4) instead of the single-device engine")
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.node_shape:
+        # the emulated-socket flag must land before the backend initializes
+        from repro.node.topology import ensure_emulated_sockets
+        tp, n_groups = (int(x) for x in args.node_shape.split("x"))
+        ensure_emulated_sockets(tp * n_groups)
+
+    from repro.configs import get_config, pad_for_tp, reduced
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.node_shape:
+        cfg = pad_for_tp(cfg, int(args.node_shape.split("x")[0]))
+        return _serve_node(args, cfg)
+    return _serve_single(args, cfg)
 
 
 if __name__ == "__main__":

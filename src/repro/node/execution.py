@@ -1,0 +1,231 @@
+"""Tensor-parallel expert execution for one socket group (paper §VI-C).
+
+``TPPagedDecodeRunner`` is a drop-in ``PagedDecodeRunner``: the same
+``prefill_kv`` / ``extend`` surface the ``ServingEngine`` drives, so
+continuous batching, speculative admission logic and the ``HBMWeightCache``
+prefetch pipeline all work unchanged per group. The difference is *where*
+the math runs:
+
+  * expert weights are sharded over the group mesh's ``model`` axis using
+    the same ``distributed/partitioning.py`` rules the training stack uses
+    (q/kv heads, FFN hidden, vocab — kv heads replicate when GQA kv < tp);
+  * the paged KV pool is sharded over its kv-head dim
+    (``partitioning.paged_pool_pspec``) so each socket holds only its KV
+    shard;
+  * one ``shard_map`` paged-extend step runs the whole decoder on local
+    shards with exactly two ``psum`` reductions per layer (attention output
+    projection + FFN down projection — the Megatron pattern the paper's
+    inter-RDU network serves) plus one for the vocab-sharded embedding
+    lookup.
+
+Prefill goes through the inherited jitted forward: with sharded params GSPMD
+partitions it along the same axes automatically — only the steady-state
+decode step, where collective latency dominates, is hand-mapped.
+
+TP=1 groups skip ``shard_map`` entirely; sharded-on-one-device params pin
+the group to its own socket.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import partitioning as part
+from repro.distributed.ctx import shard_map
+from repro.serving.engine import PagedDecodeRunner, ServingEngine
+
+
+def _tp_paged_extend(cfg: ModelConfig, tp: int, kv_sharded: bool,
+                     vocab_sharded: bool, params, pk, pv, tables, lengths,
+                     active, tokens, scratch_row: int):
+    """Per-device body of the TP paged-extend step (runs under shard_map).
+
+    Mirrors ``serving.engine._paged_extend`` on local shards: ``params`` are
+    the device-local parameter shards, ``pk/pv`` the local KV pool shard
+    (kv-head dim), everything else replicated. Activations stay replicated;
+    per-layer partial outputs are psum'd over ``'model'``.
+    """
+    from repro.models import layers as L
+
+    B, g = tokens.shape
+    block = pk.shape[2]
+    maxb = tables.shape[1]
+    S = maxb * block
+    Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Hq_l = Hq // tp
+    Hkv_l = Hkv // tp if kv_sharded else Hkv
+    didx = jax.lax.axis_index("model")
+
+    tok_tab = params["embed"]["tok"]
+    if vocab_sharded:
+        # vocab-sharded embedding: exactly one shard contributes a non-zero
+        # row per token, so the psum is a bit-exact select, not a reduction
+        Vl = tok_tab.shape[0]
+        loc = tokens - didx.astype(jnp.int32) * Vl
+        ok = (loc >= 0) & (loc < Vl)
+        h = jnp.where(ok[..., None],
+                      tok_tab[jnp.clip(loc, 0, Vl - 1)],
+                      jnp.zeros((), tok_tab.dtype))
+        h = jax.lax.psum(h, "model")
+    else:
+        h = tok_tab[tokens]
+
+    positions = lengths[:, None] + jnp.arange(g, dtype=jnp.int32)[None]
+    blk_idx = jnp.minimum(positions // block, maxb - 1)
+    rows = jnp.take_along_axis(tables, blk_idx, axis=1)
+    rows = jnp.where(active[:, None], rows, jnp.int32(scratch_row))
+    off = positions % block
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = kpos[None, None, :] <= positions[:, :, None]           # (B,g,S)
+
+    # kv head feeding each LOCAL q head (GQA): global q index -> global kv
+    # index, shifted into the local shard when the pool is kv-sharded
+    q_glob = didx * Hq_l + jnp.arange(Hq_l)
+    kv_glob = q_glob * Hkv // Hq
+    kv_idx = kv_glob - didx * Hkv_l if kv_sharded else kv_glob
+
+    def body(hh, xs):
+        lp, kp, vp = xs                    # kp (rows, block, Hkv_l, dh)
+        p = lp["attn"]
+        hn = L.apply_norm(cfg, p["norm"], hh)
+        q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"])              # local heads
+        k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"])
+        if cfg.qkv_bias:                   # head-sharded biases: local adds
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        kp = kp.at[rows, off].set(k.astype(kp.dtype))
+        vp = vp.at[rows, off].set(v.astype(vp.dtype))
+        kc = kp[tables].reshape(B, S, *kp.shape[2:])              # (B,S,Hkv_l,dh)
+        vc = vp[tables].reshape(B, S, *vp.shape[2:])
+        k_sel = kc[:, :, kv_idx]                                  # (B,S,Hq_l,dh)
+        v_sel = vc[:, :, kv_idx]
+        s = jnp.einsum("bqhd,bshd->bhqs", q, k_sel,
+                       preferred_element_type=jnp.float32) / math.sqrt(dh)
+        s = jnp.where(mask[:, None], s, -jnp.inf)
+        pa = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", pa.astype(v_sel.dtype), v_sel,
+                       preferred_element_type=jnp.float32)
+        o = o.astype(hh.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])               # partial
+        y = jax.lax.psum(y, "model")                              # reduce #1
+        if cfg.attn_out_bias:
+            y = y + p["bo"]                # replicated bias: add once, post-psum
+        hh = hh + y
+
+        mp = lp["mlp"]
+        hn = L.apply_norm(cfg, lp["mlp_norm"], hh)
+        if cfg.act in ("swiglu", "geglu"):
+            gate = hn @ mp["wi_gate"]
+            up = hn @ mp["wi_up"]
+            if cfg.mlp_bias:
+                gate = gate + mp["bi_gate"]
+                up = up + mp["bi_up"]
+            hf = L._act(cfg, gate) * up
+        else:
+            hf = hn @ mp["wi"]
+            if cfg.mlp_bias:
+                hf = hf + mp["bi"]
+            hf = L._act(cfg, hf)
+        y = hf @ mp["wo"]                                         # partial
+        y = jax.lax.psum(y, "model")                              # reduce #2
+        if cfg.mlp_bias:
+            y = y + mp["bo"]
+        hh = hh + y
+        return hh, (kp, vp)
+
+    h, (pk, pv) = jax.lax.scan(body, h, (params["layers"], pk, pv))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, tok_tab)
+    else:
+        logits = h @ params["lm_head"]
+    return logits, pk, pv                  # logits vocab-local when sharded
+
+
+class TPPagedDecodeRunner(PagedDecodeRunner):
+    """Paged prefill/extend for one socket group's mesh.
+
+    Requires q heads and the FFN hidden dim divisible by the TP degree (use
+    ``configs.pad_for_tp``); kv heads and vocab shard when divisible and
+    replicate otherwise (the same decisions ``partitioning.leaf_pspec``
+    encodes — the in_specs are read off the pspec tree, never re-derived).
+    """
+
+    def __init__(self, cfg: ModelConfig, scratch_row: int, mesh: Mesh):
+        super().__init__(cfg, scratch_row)
+        if "model" not in mesh.axis_names:
+            raise ValueError("socket-group mesh must carry a 'model' axis")
+        from repro.models import get_model
+        self.mesh = mesh
+        self.tp = int(mesh.shape["model"])
+        specs = get_model(cfg).param_specs()
+        self.param_pspecs = part.param_pspecs(specs, mesh)
+        self.param_shardings = part.param_shardings(specs, mesh)
+        self.pool_pspec = part.paged_pool_pspec(cfg, mesh)
+        if self.tp == 1:
+            self.kv_sharded = self.vocab_sharded = False
+            return
+        if cfg.n_experts > 0:
+            raise ValueError("TP paged extend supports dense FFN only")
+        if cfg.n_heads % cfg.n_kv_heads:
+            raise ValueError("TP paged extend needs n_heads % n_kv_heads == 0")
+        attn = self.param_pspecs["layers"]["attn"]
+        mlp = self.param_pspecs["layers"]["mlp"]
+        if attn["wq"][2] != "model" or mlp["wo"][1] != "model":
+            raise ValueError(
+                f"n_heads={cfg.n_heads} / d_ff={cfg.d_ff} do not shard over "
+                f"tp={self.tp} — pad the config with configs.pad_for_tp")
+        self.kv_sharded = attn["wk"][2] == "model"
+        self.vocab_sharded = (
+            self.param_pspecs["embed"]["tok"][0] == "model")
+
+    def place_params(self, host_tree):
+        """Host pytree -> TP-sharded device pytree on the group mesh (what
+        the group's ``HBMWeightCache`` uses as its ``sharding=``)."""
+        return jax.device_put(host_tree, self.param_shardings)
+
+    def extend(self, params, pk, pv, tables, lengths, active, tokens):
+        if self.tp == 1:
+            return super().extend(params, pk, pv, tables, lengths, active,
+                                  tokens)
+        key = tokens.shape
+        if key not in self._extend:
+            cfg, scratch = self.cfg, self.scratch_row
+            tp, kvs, vs = self.tp, self.kv_sharded, self.vocab_sharded
+            logits_spec = P(None, None, "model") if vs else P()
+            mapped = shard_map(
+                lambda p, k, v, tb, ln, ac, tk: _tp_paged_extend(
+                    cfg, tp, kvs, vs, p, k, v, tb, ln, ac, tk, scratch),
+                mesh=self.mesh,
+                in_specs=(self.param_pspecs, self.pool_pspec, self.pool_pspec,
+                          P(), P(), P(), P()),
+                out_specs=(logits_spec, self.pool_pspec, self.pool_pspec),
+                check_vma=False)
+            self._extend[key] = jax.jit(mapped, donate_argnums=(1, 2))
+        return self._extend[key](params, pk, pv,
+                                 jnp.asarray(tables), jnp.asarray(lengths),
+                                 jnp.asarray(active), jnp.asarray(tokens))
+
+
+def make_group_engine(coe, cfg: ModelConfig, mesh: Mesh,
+                      **engine_kwargs) -> ServingEngine:
+    """A ``ServingEngine`` whose runner executes tensor-parallel on one
+    socket group's mesh and whose paged KV pool lives sharded on that
+    group's devices (per-socket KV shards)."""
+    eng = ServingEngine(
+        coe, cfg,
+        runner_factory=lambda c, s: TPPagedDecodeRunner(c, s, mesh),
+        **engine_kwargs)
+    sh = NamedSharding(mesh, eng.runner.pool_pspec)
+    eng.pool.k = jax.device_put(eng.pool.k, sh)
+    eng.pool.v = jax.device_put(eng.pool.v, sh)
+    # the group's weight cache must install TP-sharded params on this mesh
+    coe.cache.sharding = eng.runner.param_shardings
+    return eng

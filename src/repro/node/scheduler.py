@@ -1,0 +1,237 @@
+"""Node front-end: router-driven dispatch over socket groups (paper §V-B).
+
+One ``RDUNode`` owns:
+
+  * the §II Samba-CoE router (``LMRouter`` / ``HashRouter``): untagged
+    requests are routed exactly once, at node arrival; caller-tagged
+    requests keep their tag;
+  * a shared ``ExpertStore`` — the node-wide DDR capacity tier every socket
+    group streams experts from;
+  * one ``CompositionOfExperts`` + tensor-parallel ``ServingEngine`` per
+    socket group: each group's ``HBMWeightCache`` is its private HBM working
+    set (TP-sharded over the group mesh), its paged KV pool lives sharded on
+    the group's devices;
+  * a ``Placement`` (``node/placement.py``) mapping experts to owning
+    groups, recomputable online from observed demand (``rebalance``).
+
+Dispatch: route -> owning groups from the placement -> least-loaded owner
+(queue depth + busy slots). Per-group fairness (starvation aging, resident-
+preferred group selection, prefetch) is the engine's own machinery —
+unchanged from the single-device path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.coe import CompositionOfExperts, ExpertHandle
+from repro.core.memory_tiers import MachineTiers, TPU_V5E_NODE
+from repro.node.execution import make_group_engine
+from repro.node.placement import (ExpertProfile, Placement,
+                                  plan_expert_placement)
+from repro.node.topology import NodeTopology, SocketGroup
+from repro.serving.engine import Request, ServingEngine
+from repro.store import ExpertStore, HostMemoryStore
+
+
+@dataclass
+class GroupState:
+    group: SocketGroup
+    coe: CompositionOfExperts
+    engine: ServingEngine
+    submitted: int = 0
+
+    @property
+    def load(self) -> int:
+        """Outstanding work: queued requests + busy decode slots."""
+        return (len(self.engine.queue)
+                + sum(s is not None for s in self.engine.slots))
+
+
+@dataclass
+class NodeStats:
+    requests: int
+    tokens_out: int
+    route_s: float
+    switch_stall_s: float                  # Σ per-group engine switch stalls
+    starvation_overrides: int
+    per_group: List[Dict[str, Any]]
+
+    @property
+    def imbalance(self) -> float:
+        """Inter-group load spread: (max - min) / mean of per-group tokens
+        (0 = perfectly balanced). The Table-V analogue sweep reports this
+        next to throughput."""
+        toks = [g["tokens_out"] for g in self.per_group]
+        mean = sum(toks) / max(len(toks), 1)
+        return (max(toks) - min(toks)) / mean if mean else 0.0
+
+    def tokens_per_second(self, wall_s: float) -> float:
+        return self.tokens_out / wall_s if wall_s > 0 else 0.0
+
+
+class RDUNode:
+    """A multi-socket serving node emulated over the host's JAX devices."""
+
+    def __init__(self, topology: NodeTopology, cfg: ModelConfig, router,
+                 router_params=None, *,
+                 group_hbm_bytes: int, group_kv_reserve_bytes: int = 0,
+                 store: Optional[ExpertStore] = None,
+                 machine: MachineTiers = TPU_V5E_NODE,
+                 avg_tokens: int = 16, replicate_share: float = 0.5,
+                 **engine_kwargs):
+        """``group_hbm_bytes`` is one socket group's pooled HBM tier (its
+        ``tp`` sockets' HBM behaves as one software-managed cache, the way
+        the paper's compiler treats a TP domain); ``group_kv_reserve_bytes``
+        carves each group's paged KV pool out of it. ``engine_kwargs`` pass
+        through to every group's ``ServingEngine`` (n_slots, block_size,
+        max_len, ...)."""
+        self.topology = topology
+        self.cfg = cfg
+        self.router = router
+        self.router_params = router_params
+        self.store = store if store is not None else HostMemoryStore()
+        self.machine = machine
+        self.avg_tokens = avg_tokens
+        self.replicate_share = replicate_share
+        self.groups: List[GroupState] = []
+        for g in topology.groups:
+            coe = CompositionOfExperts(
+                router, router_params, group_hbm_bytes,
+                kv_reserve_bytes=group_kv_reserve_bytes, store=self.store)
+            eng = make_group_engine(coe, cfg, g.mesh, **engine_kwargs)
+            self.groups.append(GroupState(group=g, coe=coe, engine=eng))
+        self.placement: Optional[Placement] = None
+        self.demand: Dict[str, int] = {}
+        self.route_s = 0.0
+        self.requests_in = 0
+
+    # -- registry ---------------------------------------------------------
+    def register_expert(self, name: str, host_params, domain: str = "general"):
+        """Register one expert node-wide: the first group's registration
+        persists the params into the shared store; every other group links
+        the store-resident copy (no extra DRAM)."""
+        for i, gs in enumerate(self.groups):
+            gs.coe.register(ExpertHandle(
+                name, self.cfg, host_params if i == 0 else None,
+                domain=domain))
+        self.placement = None              # registry changed: replan lazily
+
+    def expert_names(self) -> List[str]:
+        return self.groups[0].coe.expert_names()
+
+    # -- placement --------------------------------------------------------
+    def plan(self, demand: Optional[Dict[str, float]] = None) -> Placement:
+        """(Re)compute the expert -> group placement from a demand map
+        (requests per expert; omitted experts weigh 0, an empty/None map
+        plans uniform demand)."""
+        coe0 = self.groups[0].coe
+        demand = demand or {}
+        profiles = [ExpertProfile(n, coe0.experts[n].nbytes,
+                                  float(demand.get(n, 0.0)))
+                    for n in coe0.expert_names()]
+        self.placement = plan_expert_placement(
+            profiles,
+            [gs.coe.hbm_budget.weights_bytes for gs in self.groups],
+            machine=self.machine, tp=self.topology.tp,
+            avg_tokens=self.avg_tokens,
+            replicate_share=self.replicate_share)
+        return self.placement
+
+    def rebalance(self) -> Placement:
+        """Replan from the demand observed so far and prewarm each group's
+        cache with one planned-resident expert (async prefetch — never
+        blocks decode)."""
+        placement = self.plan(dict(self.demand))
+        for gs in self.groups:
+            for name in placement.resident.get(gs.group.gid, ()):
+                if not gs.coe.cache.resident(name):
+                    gs.coe.cache.prefetch(name)
+                    break
+        return placement
+
+    # -- serving ----------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Route (if untagged), pick the least-loaded owning group, enqueue.
+        Returns the chosen group id."""
+        if self.placement is None:
+            self.plan(dict(self.demand))
+        if req.expert is None:
+            req.expert, dt = self.groups[0].coe.route_request(req.tokens)
+            self.route_s += dt
+        elif req.expert not in self.groups[0].coe.experts:
+            raise KeyError(f"request {req.rid}: unknown expert {req.expert!r}")
+        self.demand[req.expert] = self.demand.get(req.expert, 0) + 1
+        owners = self.placement.owners(req.expert) or tuple(
+            range(len(self.groups)))
+        gid = min(owners, key=lambda g: self.groups[g].load)
+        self.groups[gid].engine.submit(req)
+        self.groups[gid].submitted += 1
+        self.requests_in += 1
+        return gid
+
+    @property
+    def has_work(self) -> bool:
+        return any(gs.engine.has_work for gs in self.groups)
+
+    def step(self) -> List[Request]:
+        """One node iteration: step every group engine with work; returns
+        requests completed across the node."""
+        done: List[Request] = []
+        for gs in self.groups:
+            if gs.engine.has_work:
+                done.extend(gs.engine.step())
+        return done
+
+    def drain(self, max_steps: int = 1_000_000) -> List[Request]:
+        out: List[Request] = []
+        steps = 0
+        while self.has_work:
+            out.extend(self.step())
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError("node drain: exceeded max_steps")
+        return out
+
+    # -- accounting -------------------------------------------------------
+    def hbm_within_budget(self) -> bool:
+        """Every group's weight cache and KV pool inside its HBM shares."""
+        for gs in self.groups:
+            cache, budget = gs.coe.cache, gs.coe.hbm_budget
+            if cache.used_bytes > cache.capacity:
+                return False
+            if budget.kv_bytes and (gs.engine.pool.capacity_bytes()
+                                    > budget.kv_bytes):
+                return False
+        return True
+
+    def stats(self) -> NodeStats:
+        per_group = []
+        for gs in self.groups:
+            st, cs = gs.engine.stats, gs.coe.cache.stats
+            per_group.append({
+                "gid": gs.group.gid, "tp": gs.group.tp,
+                "submitted": gs.submitted,
+                "requests": st.requests, "tokens_out": st.tokens_out,
+                "decode_rounds": st.decode_rounds,
+                "occupancy": st.mean_occupancy,
+                "switches": st.switches,
+                "switch_stall_s": st.switch_s,
+                "starvation_overrides": st.starvation_overrides,
+                "cache_hits": cs.hits, "cache_misses": cs.misses,
+                "prefetch_hits": cs.prefetch_hits,
+                "hbm_used_bytes": gs.coe.cache.used_bytes,
+            })
+        return NodeStats(
+            requests=sum(g["requests"] for g in per_group),
+            tokens_out=sum(g["tokens_out"] for g in per_group),
+            route_s=self.route_s,
+            switch_stall_s=sum(g["switch_stall_s"] for g in per_group),
+            starvation_overrides=sum(g["starvation_overrides"]
+                                     for g in per_group),
+            per_group=per_group)
+
+    def close(self):
+        for gs in self.groups:
+            gs.coe.cache.close()

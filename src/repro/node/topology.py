@@ -1,0 +1,103 @@
+"""Socket-group topology for one multi-socket RDU node (paper §III / §VI-C).
+
+The paper's 8-socket node runs each expert tensor-parallel over a dedicated
+inter-RDU network; the node may also be carved into several independent
+TP groups, each serving its own expert working set. We model that carve as
+``TP degree x replica count`` over the host's device list: a node of 8
+devices can run as one TP=8 group (``8x1``), four TP=2 groups (``2x4``),
+eight TP=1 groups (``1x8``), and so on. Each group gets its own one-axis
+``('model',)`` JAX mesh over a disjoint device subset — the inter-RDU TP
+domain — while the shared ``ExpertStore`` plays the node-wide DDR tier.
+
+Emulation: run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+to get 8 CPU "sockets" on one host.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.launch.mesh import make_device_mesh
+
+
+def ensure_emulated_sockets(n: int):
+    """Make ``n`` emulated CPU sockets visible. The
+    ``--xla_force_host_platform_device_count`` flag only works before the
+    JAX backend initializes, so call this before anything touches devices;
+    if the backend beat us to it, fail with the exact flag to relaunch
+    with. Node drivers (``launch/serve.py --node-shape``,
+    ``benchmarks/run.py --sweep-node``) share this bootstrap."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag_re = r"--xla_force_host_platform_device_count=(\d+)"
+    m = re.search(flag_re, flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    elif int(m.group(1)) < n:
+        # a stale smaller count (e.g. exported by an earlier run) still
+        # works if the backend has not initialized yet — raise it in place
+        os.environ["XLA_FLAGS"] = re.sub(
+            flag_re, f"--xla_force_host_platform_device_count={n}", flags)
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"{n} emulated sockets requested but the JAX backend already "
+            f"initialized with {len(jax.devices())} device(s); launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+
+
+@dataclass(frozen=True)
+class SocketGroup:
+    """One TP domain: ``tp`` sockets behind a single serving engine."""
+    gid: int
+    tp: int
+    mesh: Mesh
+
+    @property
+    def devices(self) -> Tuple:
+        return tuple(self.mesh.devices.flat)
+
+
+@dataclass(frozen=True)
+class NodeTopology:
+    tp: int
+    n_groups: int
+    groups: Tuple[SocketGroup, ...]
+
+    @property
+    def n_sockets(self) -> int:
+        return self.tp * self.n_groups
+
+    @property
+    def name(self) -> str:
+        return f"{self.tp}x{self.n_groups}"
+
+
+def make_node_topology(tp: int, n_groups: Optional[int] = None,
+                       devices: Optional[Sequence] = None) -> NodeTopology:
+    """Carve the device list into ``n_groups`` disjoint TP-``tp`` socket
+    groups (default: as many groups as the devices allow). Group ``g`` owns
+    devices ``[g*tp, (g+1)*tp)`` — contiguous, like the paper's pairs of
+    sockets sharing a DDR channel group."""
+    devs = list(devices if devices is not None else jax.devices())
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if n_groups is None:
+        n_groups = len(devs) // tp
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    need = tp * n_groups
+    if need > len(devs):
+        raise ValueError(
+            f"topology {tp}x{n_groups} needs {need} devices but only "
+            f"{len(devs)} are visible — emulate more sockets with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    groups = tuple(
+        SocketGroup(g, tp, make_device_mesh((tp,), ("model",),
+                                            devs[g * tp:(g + 1) * tp]))
+        for g in range(n_groups))
+    return NodeTopology(tp=tp, n_groups=n_groups, groups=groups)

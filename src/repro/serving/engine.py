@@ -371,6 +371,7 @@ class ServingEngine:
                  policy=None, scheduler: str = "continuous",
                  switch_quantum: int = 8, starvation_limit: int = 16,
                  runner: Optional[PagedDecodeRunner] = None,
+                 runner_factory=None,
                  kv_dtype=jnp.bfloat16):
         if scheduler not in ("continuous", "run_to_completion"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
@@ -398,7 +399,11 @@ class ServingEngine:
             cfg.head_dim, kv_dtype, scratch=True)
         self._empty_table = np.full((self.max_blocks,),
                                     self.pool.scratch_index, np.int32)
-        self.runner = runner or PagedDecodeRunner(cfg, self.pool.scratch_index)
+        # runner_factory lets a caller supply a runner that needs the pool's
+        # scratch row without duplicating the pool-sizing logic above (the
+        # node subsystem injects its tensor-parallel runner this way)
+        self.runner = runner or (runner_factory or PagedDecodeRunner)(
+            cfg, self.pool.scratch_index)
         if self.runner.scratch_row != self.pool.scratch_index:
             raise ValueError(
                 "shared runner was compiled for a different pool size "
@@ -415,7 +420,10 @@ class ServingEngine:
 
     # -- public API -------------------------------------------------------
     def submit(self, req: Request):
-        """Route and enqueue. Routing happens once, at arrival (§II)."""
+        """Enqueue a request. An untagged request (``expert=None``) is routed
+        through the composition's router once, at arrival (§II); a request
+        already tagged by an upstream router (e.g. the node scheduler) keeps
+        its tag — routing happens exactly once either way."""
         S = len(req.tokens)
         need = S + req.max_new_tokens + self.policy.reserve_slack
         if need > self.max_blocks * self.block:
@@ -425,11 +433,12 @@ class ServingEngine:
         if -(-need // self.block) > self.pool.n_blocks:
             raise ValueError(
                 f"request {req.rid} needs more KV blocks than the pool owns")
-        t0 = time.perf_counter()
-        names = self.coe.expert_names()
-        e = int(self.coe.route(np.asarray(req.tokens)[None])[0]) % len(names)
-        self.stats.route_s += time.perf_counter() - t0
-        req.expert = names[e]
+        if req.expert is None:
+            req.expert, dt = self.coe.route_request(req.tokens)
+            self.stats.route_s += dt
+        elif req.expert not in self.coe.experts:
+            raise KeyError(
+                f"request {req.rid}: unknown expert {req.expert!r}")
         self.queue.append(req)
 
     @property
