@@ -22,9 +22,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
+
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 
 ROWS = []
+
+
+def _gated_metrics(values: dict) -> dict:
+    """Publish the gated bench metrics as registry gauges and read the
+    emitted dict back off a registry snapshot — the JSON the CI gate
+    (``tools/check_bench.py``) consumes is a registry view, the same
+    pipeline ``--metrics-port`` serves, not a hand-built dict."""
+    reg = MetricsRegistry()
+    for k, v in values.items():
+        reg.gauge(k).set(float(v))
+    snap = reg.snapshot()
+    return {k: snap[k] for k in values}
 
 
 def _results_dir() -> Path:
@@ -370,7 +385,7 @@ def bench_sweep_switching(tiny: bool = False):
                     coe.generate(prompts, 2, prefetch_next=prefetch)  # warmup
                     for e in coe.cache.expert_ids():
                         coe.cache.drop(e)
-                    coe.cache.stats = type(coe.cache.stats)()
+                    coe.cache.stats.reset()
                     t0 = time.perf_counter()
                     for _ in range(rounds):
                         coe.generate(prompts, n_tokens,
@@ -395,6 +410,9 @@ def bench_sweep_switching(tiny: bool = False):
                         "switch_stall_s": st.switch_seconds,
                         "stall_miss_s": st.stall_miss_seconds,
                         "stall_prefetch_s": st.stall_prefetch_seconds,
+                        "stall_failed_prefetch_s":
+                            st.stall_failed_prefetch_seconds,
+                        "prefetch_failures": st.prefetch_failures,
                         "stall_per_switch_ms": 1e3 * per_switch[mode],
                         "store_read_s": st.store_read_seconds,
                         "h2d_s": st.h2d_seconds,
@@ -433,7 +451,7 @@ def bench_sweep_switching(tiny: bool = False):
                       "per_expert_prompts": per_expert,
                       "n_tokens": n_tokens, "rounds": rounds,
                       "hbm_capacity_experts": 1.5, "tiny": tiny},
-           "rows": rows, "metrics": metrics}
+           "rows": rows, "metrics": _gated_metrics(metrics)}
     (_results_dir() / "bench_switching.json").write_text(
         json.dumps(doc, indent=1))
 
@@ -519,7 +537,7 @@ def bench_sweep_arrival(tiny: bool = False):
                 eng.submit(Request(rid=10_000, tokens=np.zeros(10, np.int32),
                                    max_new_tokens=2))
                 eng.drain()
-                eng.stats.__init__()
+                eng.stats.reset()
                 done, wall = serve_trace(eng, traces[lam])
                 lat = np.array([r.latency_s for r in done])
                 run = {"wall": wall,
@@ -562,13 +580,14 @@ def bench_sweep_arrival(tiny: bool = False):
     metrics = {
         "arrival:continuous:tps@burst": best[("continuous", hi)]["tps"],
         "arrival:continuous_vs_rtc_ratio": ratio,
+        "arrival:continuous:p99_s@burst": best[("continuous", hi)]["p99"],
     }
     doc = {"schema": 1,
            "config": {"arch": "samba-coe-expert-7b(reduced)",
                       "n_requests": n_req, "repeats": repeats,
                       "loads": ["inf" if np.isinf(l) else l for l in loads],
                       "tiny": tiny},
-           "rows": rows, "metrics": metrics}
+           "rows": rows, "metrics": _gated_metrics(metrics)}
     (_results_dir() / "bench_arrival.json").write_text(
         json.dumps(doc, indent=1))
 
@@ -590,11 +609,9 @@ def bench_sweep_node(tiny: bool = False):
     _ensure_host_devices(8)    # covers --sweep-node AND --only sweep_node
     from repro.configs import get_config, pad_for_tp, reduced
     from repro.core import HashRouter
-    from repro.core.switching import SwitchStats
     from repro.models import get_model
     from repro.node import make_node_topology, RDUNode
     from repro.serving import Request
-    from repro.serving.engine import ServeStats
 
     shapes = [(8, 1), (4, 2), (2, 4), (1, 8)]
     n_exp = 4 if tiny else 6
@@ -629,8 +646,8 @@ def bench_sweep_node(tiny: bool = False):
                 max_new_tokens=2, expert=node.expert_names()[0]))
         node.drain()
         for gs in node.groups:
-            gs.engine.stats = ServeStats()
-            gs.coe.cache.stats = SwitchStats()
+            gs.engine.stats.reset()
+            gs.coe.cache.stats.reset()
             gs.submitted = 0
         node.route_s = 0.0
 
@@ -679,7 +696,7 @@ def bench_sweep_node(tiny: bool = False):
                       "shapes": [f"{t}x{g}" for t, g in shapes],
                       "n_experts": n_exp, "n_requests": n_req,
                       "total_slots": total_slots, "tiny": tiny},
-           "rows": rows, "metrics": metrics}
+           "rows": rows, "metrics": _gated_metrics(metrics)}
     (_results_dir() / "bench_node.json").write_text(json.dumps(doc, indent=1))
 
 
@@ -700,7 +717,15 @@ def main(argv=None) -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized sweep configs (fewer experts/requests/"
                          "repeats); used by the bench-smoke CI job")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record engine/cache/node spans while benching and "
+                         "export a Chrome-trace / Perfetto JSON here "
+                         "(default results/trace_bench.json when the flag "
+                         "is given with no value)", nargs="?",
+                    const="__default__")
     args = ap.parse_args(argv)
+    if args.trace_out is not None:
+        obs_trace.enable()
     if args.sweep_node:
         # before ANY sweep dispatches: a combined invocation (e.g.
         # --sweep-arrival --sweep-node) must not let the earlier sweep
@@ -735,6 +760,15 @@ def main(argv=None) -> None:
             elif name in ("sweep", "sweep_switching", "sweep_node"):
                 continue          # heavy: opt-in via --sweep-* flags
             fn()
+    if args.trace_out is not None:
+        obs_trace.disable()
+        out = (args.trace_out if args.trace_out != "__default__"
+               else _results_dir() / "trace_bench.json")
+        path = obs_trace.export(out)
+        doc = json.loads(Path(path).read_text())
+        problems = obs_trace.validate_chrome_trace(doc)
+        print(f"trace: {len(doc['traceEvents'])} events -> {path}"
+              + (f" ({len(problems)} schema problems)" if problems else ""))
     csv_path = _results_dir() / "benchmarks.csv"
     if any_sweep or args.only:
         # partial runs append (dedup by row name) instead of clobbering

@@ -47,7 +47,17 @@ def main():
                     "tag (expert pinned by the client); the rest arrive "
                     "expert=None and are routed by the composition's "
                     "router at submit")
+    ap.add_argument("--trace", default=None, metavar="PATH", nargs="?",
+                    const="results/trace_coe_serving.json",
+                    help="record request-lifecycle spans and export a "
+                    "Chrome-trace / Perfetto JSON (default "
+                    "results/trace_coe_serving.json; open at "
+                    "https://ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace
+        trace.enable()
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
     model = get_model(cfg)
@@ -132,6 +142,13 @@ def main():
         by_expert[r.expert] = by_expert.get(r.expert, 0) + 1
     print(f"requests per expert ({n_tagged} caller-tagged, "
           f"{len(done) - n_tagged} router-routed):", by_expert)
+
+    if args.trace:
+        from repro.obs import trace
+        trace.disable()
+        path = trace.export(args.trace)
+        print(f"trace: {len(trace.events())} events -> {path} "
+              f"(open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

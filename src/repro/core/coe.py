@@ -67,7 +67,8 @@ class CompositionOfExperts:
     def __init__(self, router, router_params, hbm_capacity_bytes: int,
                  sharding=None, kv_reserve_bytes: int = 0,
                  store: Optional[ExpertStore] = None,
-                 max_inflight_prefetch: int = 2):
+                 max_inflight_prefetch: int = 2,
+                 registry=None, obs_labels=None):
         """``kv_reserve_bytes`` carves a slice of the HBM tier out of the
         expert weight cache for the serving engine's paged KV pool — the
         explicit resident-experts vs concurrent-requests tradeoff
@@ -96,6 +97,8 @@ class CompositionOfExperts:
             store=self.store,
             sharding=sharding,
             max_inflight=max_inflight_prefetch,
+            registry=registry,
+            labels=obs_labels,
         )
 
     # -- registry (the dynamic linker/loader of §V-B) --------------------

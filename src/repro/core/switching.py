@@ -24,16 +24,19 @@ Fig-1 "switch" bar).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 
 from repro.core.memory_tiers import MachineTiers, TPU_V5E_NODE
+from repro.obs import trace
+from repro.obs.ledger import TransferLedger
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import StatsView, counter_field
 from repro.store import ExpertStore, HostMemoryStore
 
 
@@ -41,23 +44,34 @@ def tree_bytes(tree) -> int:
     return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
 
 
-@dataclass
-class SwitchStats:
-    hits: int = 0
-    misses: int = 0
-    prefetch_hits: int = 0          # activates served by an in-flight prefetch
-    prefetches_issued: int = 0
-    prefetches_cancelled: int = 0
-    evictions: int = 0
-    drops: int = 0                  # explicit drop() retirements
-    bytes_copied_in: int = 0
-    bytes_copied_back: int = 0
-    bytes_copyback_elided: int = 0
-    switch_seconds: float = 0.0     # caller-side stall inside activate()
-    stall_miss_seconds: float = 0.0      # ...attributable to true misses
-    stall_prefetch_seconds: float = 0.0  # ...attributable to prefetch consumes
-    store_read_seconds: float = 0.0  # capacity-tier read (worker side)
-    h2d_seconds: float = 0.0         # device_put + ready wait (worker side)
+class SwitchStats(StatsView):
+    """Switching-engine counters as a view over the metrics registry
+    (``switch.*`` series). Field semantics unchanged from the old
+    dataclass; ``as_dict`` keys are a superset of the old shape (the two
+    ``failed-prefetch`` attribution fields are new)."""
+
+    PREFIX = "switch"
+    DERIVED = ("copy_seconds", "overlap_ratio")
+
+    hits = counter_field()
+    misses = counter_field()
+    prefetch_hits = counter_field()   # activates served by in-flight prefetch
+    prefetch_failures = counter_field()  # prefetch loads that died; retried as miss
+    prefetches_issued = counter_field()
+    prefetches_cancelled = counter_field()
+    evictions = counter_field()
+    drops = counter_field()           # explicit drop() retirements
+    bytes_copied_in = counter_field()
+    bytes_copied_back = counter_field()
+    bytes_copyback_elided = counter_field()
+    switch_seconds = counter_field(0.0)  # caller-side stall inside activate()
+    stall_miss_seconds = counter_field(0.0)      # ...due to true misses
+    stall_prefetch_seconds = counter_field(0.0)  # ...due to prefetch consumes
+    stall_failed_prefetch_seconds = counter_field(0.0)  # ...waiting on a
+    # prefetch future that then raised — previously silently folded into the
+    # miss bucket, hiding the wasted prefetch-issue cost
+    store_read_seconds = counter_field(0.0)  # capacity-tier read (worker side)
+    h2d_seconds = counter_field(0.0)  # device_put + ready wait (worker side)
 
     @property
     def copy_seconds(self) -> float:
@@ -74,12 +88,6 @@ class SwitchStats:
         if total <= 0:
             return 0.0
         return max(0.0, min(1.0, 1.0 - self.switch_seconds / total))
-
-    def as_dict(self):
-        d = dataclasses.asdict(self)
-        d["copy_seconds"] = self.copy_seconds
-        d["overlap_ratio"] = self.overlap_ratio
-        return d
 
 
 @dataclass
@@ -145,7 +153,9 @@ class HBMWeightCache:
                  writeback: Optional[Callable[[str, Any], None]] = None,
                  device=None,
                  sharding=None,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2,
+                 registry: Optional[MetricsRegistry] = None,
+                 labels: Optional[Dict[str, Any]] = None):
         if (store is None) == (fetch is None):
             raise ValueError("pass exactly one of store= or fetch=")
         self.capacity = int(capacity_bytes)
@@ -164,7 +174,13 @@ class HBMWeightCache:
         self._reserved: dict = {}            # expert_id -> bytes held inflight
         self._pool: Optional[ThreadPoolExecutor] = None
         self._used = 0
-        self.stats = SwitchStats()
+        # stats view + tier-transfer ledger share one registry (a private
+        # one unless the caller publishes into a shared registry — the node
+        # scheduler labels each group's cache, serve.py the default one)
+        registry = registry if registry is not None else MetricsRegistry()
+        self.stats = SwitchStats(registry=registry, labels=labels)
+        self.ledger = TransferLedger(registry, labels)
+        self._hbm_used_gauge = registry.gauge("switch.hbm_used_bytes", labels)
 
     # -- internals -----------------------------------------------------
     def _executor(self) -> ThreadPoolExecutor:
@@ -185,10 +201,12 @@ class HBMWeightCache:
         """Worker-side load: store read, then H2D copy. No shared-state
         mutation here — the consuming (caller) thread owns the books."""
         t0 = time.perf_counter()
-        host = self.store.get(expert_id)
+        with trace.span("store_read", cat="switch", expert=expert_id):
+            host = self.store.get(expert_id)
         t1 = time.perf_counter()
-        dev = self._put_device(host)
-        jax.block_until_ready(dev)
+        with trace.span("h2d", cat="switch", expert=expert_id):
+            dev = self._put_device(host)
+            jax.block_until_ready(dev)
         t2 = time.perf_counter()
         return _Loaded(dev, tree_bytes(host), t1 - t0, t2 - t1)
 
@@ -196,12 +214,20 @@ class HBMWeightCache:
         """Account one entry leaving HBM (eviction or drop): write back
         dirty mutable state, elide the copy for read-only weights."""
         self._used -= entry.nbytes
+        self._hbm_used_gauge.set(self._used)
         if entry.dirty and not entry.read_only and self.writeback is not None:
-            host = jax.device_get(entry.value)
-            self.writeback(name, host)
+            t0 = time.perf_counter()
+            with trace.span("writeback", cat="switch", expert=name):
+                host = jax.device_get(entry.value)
+                self.writeback(name, host)
             self.stats.bytes_copied_back += entry.nbytes
+            self.ledger.record("writeback", entry.nbytes,
+                               time.perf_counter() - t0, cause="dirty",
+                               expert=name)
         else:
             self.stats.bytes_copyback_elided += entry.nbytes
+            self.ledger.record("elided", entry.nbytes, cause="read_only",
+                               expert=name)
 
     def _evict_one(self):
         name, entry = self._entries.popitem(last=False)     # LRU = oldest
@@ -231,14 +257,24 @@ class HBMWeightCache:
             self._evict_one()
         return True
 
-    def _finish_load(self, expert_id: str, loaded: _Loaded, read_only: bool):
+    def _unreserve(self, expert_id: str):
+        need = self._reserved.pop(expert_id, None)
+        if need:
+            self.ledger.release(need)
+
+    def _finish_load(self, expert_id: str, loaded: _Loaded, read_only: bool,
+                     cause: str = "miss"):
         self._make_room(loaded.nbytes)
         self.stats.bytes_copied_in += loaded.nbytes
         self.stats.store_read_seconds += loaded.read_s
         self.stats.h2d_seconds += loaded.h2d_s
+        self.ledger.record("store_read", loaded.nbytes, loaded.read_s,
+                           cause=cause, expert=expert_id)
+        self.ledger.record("h2d", loaded.nbytes, loaded.h2d_s, cause=cause)
         self._entries[expert_id] = _Entry(loaded.value, loaded.nbytes,
                                           read_only)
         self._used += loaded.nbytes
+        self._hbm_used_gauge.set(self._used)
         return loaded.value
 
     # -- public API ------------------------------------------------------
@@ -273,31 +309,50 @@ class HBMWeightCache:
             self.stats.hits += 1
             return self._entries[expert_id].value
         t0 = time.perf_counter()
+        sp = trace.span("activate", cat="switch", expert=expert_id)
+        sp.__enter__()
         fut = self._inflight.pop(expert_id, None)
         consumed_prefetch = False
+        failed_wait_s = 0.0          # time sunk into a prefetch that raised
         loaded = None
         if fut is not None:
-            self._reserved.pop(expert_id, None)
+            self._unreserve(expert_id)
             try:
                 loaded = fut.result()
                 consumed_prefetch = True
                 self.stats.hits += 1
                 self.stats.prefetch_hits += 1
             except Exception:
-                loaded = None        # failed prefetch load: retry as a miss
+                # failed prefetch load: retry as a miss — but the wait on
+                # the doomed future is its own stall cause, not miss time
+                # (previously folded into the miss bucket, hiding the
+                # wasted prefetch-issue cost)
+                failed_wait_s = time.perf_counter() - t0
+                self.stats.prefetch_failures += 1
+                self.stats.stall_failed_prefetch_seconds += failed_wait_s
+                self.ledger.note_stall(failed_wait_s, cause="failed_prefetch")
+                trace.instant("prefetch_failed", cat="switch",
+                              expert=expert_id)
         if loaded is None:
             # true miss: load inline on the caller thread — submitting to
             # the (max_inflight-sized) executor would queue the critical
             # path behind in-flight prefetches of OTHER experts
             self.stats.misses += 1
             loaded = self._load_job(expert_id)
-        value = self._finish_load(expert_id, loaded, read_only)
+        cause = "prefetch" if consumed_prefetch else (
+            "failed_prefetch" if failed_wait_s else "miss")
+        value = self._finish_load(expert_id, loaded, read_only, cause=cause)
         dt = time.perf_counter() - t0
         self.stats.switch_seconds += dt
         if consumed_prefetch:
             self.stats.stall_prefetch_seconds += dt
+            self.ledger.note_stall(dt, cause="prefetch")
         else:
-            self.stats.stall_miss_seconds += dt
+            miss_dt = dt - failed_wait_s
+            self.stats.stall_miss_seconds += miss_dt
+            self.ledger.note_stall(miss_dt, cause="miss")
+        sp.add(outcome=cause, nbytes=loaded.nbytes)
+        sp.__exit__(None, None, None)
         return value
 
     def prefetch(self, expert_id: str, *, read_only: bool = True) -> bool:
@@ -325,6 +380,7 @@ class HBMWeightCache:
             if not self._make_room(need, strict=False):
                 return False
             self._reserved[expert_id] = need
+            self.ledger.reserve(need)
         self._inflight[expert_id] = self._executor().submit(
             self._load_job, expert_id)
         self.stats.prefetches_issued += 1
@@ -336,7 +392,7 @@ class HBMWeightCache:
         fut = self._inflight.pop(expert_id, None)
         if fut is None:
             return False
-        self._reserved.pop(expert_id, None)
+        self._unreserve(expert_id)
         fut.cancel()
         self.stats.prefetches_cancelled += 1
         return True

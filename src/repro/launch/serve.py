@@ -23,16 +23,19 @@ import time
 import numpy as np
 
 
-def build_coe(cfg, n_experts: int, hbm_experts: float, seed: int = 0):
+def build_coe(cfg, n_experts: int, hbm_experts: float, seed: int = 0,
+              registry=None):
     """Create n_experts fine-tune-style variants of one backbone (the paper
     derives all 150 experts from Llama2-7B). ``hbm_experts`` is the HBM
-    tier capacity in units of one expert."""
+    tier capacity in units of one expert. ``registry`` publishes the weight
+    cache's metrics into a shared ``MetricsRegistry`` (``--metrics-port``)."""
     from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
 
     hosts, nbytes = build_experts(cfg, n_experts, seed)
     coe = CompositionOfExperts(
         HashRouter(n_experts), None,
-        hbm_capacity_bytes=int(max(1.0, hbm_experts) * nbytes))
+        hbm_capacity_bytes=int(max(1.0, hbm_experts) * nbytes),
+        registry=registry)
     for name, host, domain in hosts:
         coe.register(ExpertHandle(name, cfg, host, domain=domain))
     return coe, nbytes
@@ -80,13 +83,18 @@ def _make_requests(args, cfg, expert_names):
 
 
 def _serve_single(args, cfg):
+    from repro.obs import get_registry
     from repro.serving import ServingEngine
 
-    coe, nbytes = build_coe(cfg, args.n_experts, args.hbm_experts)
+    # publish every engine/cache/ledger series into the process default
+    # registry — what --metrics-port serves
+    coe, nbytes = build_coe(cfg, args.n_experts, args.hbm_experts,
+                            registry=get_registry())
     engine = ServingEngine(coe, cfg,
                            max_len=args.prompt_len + args.new_tokens,
                            n_slots=args.n_slots, block_size=8,
-                           scheduler=args.scheduler)
+                           scheduler=args.scheduler,
+                           registry=get_registry())
     reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
     for r in reqs:
@@ -104,12 +112,16 @@ def _serve_single(args, cfg):
           f"occupancy {st.mean_occupancy:.2f}, {st.switches} switches")
     print(f"weight cache: {coe.cache.stats}")
     print(f"kv pool: {engine.pool.stats}")
+    print(f"tier ledger: overlap={coe.cache.ledger.overlap_ratio:.2f} "
+          f"store_read={coe.cache.ledger.bytes_moved('store_read')}B "
+          f"h2d={coe.cache.ledger.bytes_moved('h2d')}B")
     return engine
 
 
 def _serve_node(args, cfg):
     from repro.core import HashRouter
     from repro.node import make_node_topology, RDUNode
+    from repro.obs import get_registry
 
     tp, n_groups = (int(x) for x in args.node_shape.split("x"))
     topo = make_node_topology(tp, n_groups)
@@ -119,7 +131,8 @@ def _serve_node(args, cfg):
                    group_kv_reserve_bytes=int(0.8 * nbytes),
                    n_slots=max(1, args.n_slots // n_groups), block_size=8,
                    max_len=args.prompt_len + args.new_tokens,
-                   scheduler=args.scheduler)
+                   scheduler=args.scheduler,
+                   registry=get_registry())
     for name, host, domain in hosts:
         node.register_expert(name, host, domain=domain)
     placement = node.plan()
@@ -166,6 +179,15 @@ def main(argv=None):
                     help="serve through a TP x G socket-group RDU node "
                     "(e.g. 2x4) instead of the single-device engine")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the metrics registry over HTTP while "
+                    "running: /metrics (Prometheus text), /metrics.json "
+                    "(flat snapshot), /healthz. PORT 0 binds an ephemeral "
+                    "port (printed at startup)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request-lifecycle spans and export a "
+                    "Chrome-trace / Perfetto JSON to PATH on exit "
+                    "(open at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     if args.node_shape:
@@ -175,14 +197,31 @@ def main(argv=None):
         ensure_emulated_sockets(tp * n_groups)
 
     from repro.configs import get_config, pad_for_tp, reduced
+    from repro.obs import get_registry, serve_metrics, trace
+
+    server = None
+    if args.metrics_port is not None:
+        server = serve_metrics(get_registry(), port=args.metrics_port)
+        print(f"metrics: {server.url}/metrics "
+              f"(+ /metrics.json, /healthz)")
+    if args.trace_out:
+        trace.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if args.node_shape:
-        cfg = pad_for_tp(cfg, int(args.node_shape.split("x")[0]))
-        return _serve_node(args, cfg)
-    return _serve_single(args, cfg)
+    try:
+        if args.node_shape:
+            cfg = pad_for_tp(cfg, int(args.node_shape.split("x")[0]))
+            return _serve_node(args, cfg)
+        return _serve_single(args, cfg)
+    finally:
+        if args.trace_out:
+            trace.disable()
+            path = trace.export(args.trace_out)
+            print(f"trace: {len(trace.events())} events -> {path}")
+        if server is not None:
+            server.stop()
 
 
 if __name__ == "__main__":

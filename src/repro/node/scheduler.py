@@ -31,6 +31,9 @@ from repro.node.execution import make_group_engine
 from repro.node.placement import (ExpertProfile, Placement,
                                   plan_expert_placement)
 from repro.node.topology import NodeTopology, SocketGroup
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import StatsView, counter_field
 from repro.serving.engine import Request, ServingEngine
 from repro.store import ExpertStore, HostMemoryStore
 
@@ -49,14 +52,26 @@ class GroupState:
                 + sum(s is not None for s in self.engine.slots))
 
 
-@dataclass
-class NodeStats:
-    requests: int
-    tokens_out: int
-    route_s: float
-    switch_stall_s: float                  # Σ per-group engine switch stalls
-    starvation_overrides: int
-    per_group: List[Dict[str, Any]]
+class NodeStats(StatsView):
+    """Node-level counters as a view over the metrics registry (``node.*``
+    series). ``per_group`` — the per-socket-group breakdown list — is not a
+    scalar metric and rides along as a plain attribute (the per-group
+    numbers themselves live in the registry under ``group=<gid>`` labels
+    when the node publishes into a shared registry)."""
+
+    PREFIX = "node"
+    DERIVED = ("imbalance",)
+
+    requests = counter_field()
+    tokens_out = counter_field()
+    route_s = counter_field(0.0)
+    switch_stall_s = counter_field(0.0)    # Σ per-group engine switch stalls
+    starvation_overrides = counter_field()
+
+    def __init__(self, registry=None, labels=None,
+                 per_group: Optional[List[Dict[str, Any]]] = None, **values):
+        super().__init__(registry, labels, **values)
+        self.per_group = list(per_group or [])
 
     @property
     def imbalance(self) -> float:
@@ -70,6 +85,11 @@ class NodeStats:
     def tokens_per_second(self, wall_s: float) -> float:
         return self.tokens_out / wall_s if wall_s > 0 else 0.0
 
+    def as_dict(self) -> Dict[str, Any]:
+        d = super().as_dict()
+        d["per_group"] = self.per_group
+        return d
+
 
 class RDUNode:
     """A multi-socket serving node emulated over the host's JAX devices."""
@@ -80,6 +100,7 @@ class RDUNode:
                  store: Optional[ExpertStore] = None,
                  machine: MachineTiers = TPU_V5E_NODE,
                  avg_tokens: int = 16, replicate_share: float = 0.5,
+                 registry: Optional[MetricsRegistry] = None,
                  **engine_kwargs):
         """``group_hbm_bytes`` is one socket group's pooled HBM tier (its
         ``tp`` sockets' HBM behaves as one software-managed cache, the way
@@ -95,12 +116,20 @@ class RDUNode:
         self.machine = machine
         self.avg_tokens = avg_tokens
         self.replicate_share = replicate_share
+        # one node-wide registry: every group's engine/cache/ledger series
+        # lands here under a group=<gid> label, so the --metrics-port
+        # endpoint and registry snapshots see the whole node at once
+        self.registry = registry if registry is not None else MetricsRegistry()
         self.groups: List[GroupState] = []
         for g in topology.groups:
+            glabels = {"group": g.gid}
             coe = CompositionOfExperts(
                 router, router_params, group_hbm_bytes,
-                kv_reserve_bytes=group_kv_reserve_bytes, store=self.store)
-            eng = make_group_engine(coe, cfg, g.mesh, **engine_kwargs)
+                kv_reserve_bytes=group_kv_reserve_bytes, store=self.store,
+                registry=self.registry, obs_labels=glabels)
+            eng = make_group_engine(coe, cfg, g.mesh,
+                                    registry=self.registry,
+                                    obs_labels=glabels, **engine_kwargs)
             self.groups.append(GroupState(group=g, coe=coe, engine=eng))
         self.placement: Optional[Placement] = None
         self.demand: Dict[str, int] = {}
@@ -131,24 +160,34 @@ class RDUNode:
         profiles = [ExpertProfile(n, coe0.experts[n].nbytes,
                                   float(demand.get(n, 0.0)))
                     for n in coe0.expert_names()]
-        self.placement = plan_expert_placement(
-            profiles,
-            [gs.coe.hbm_budget.weights_bytes for gs in self.groups],
-            machine=self.machine, tp=self.topology.tp,
-            avg_tokens=self.avg_tokens,
-            replicate_share=self.replicate_share)
+        with trace.span("plan_placement", cat="node",
+                        experts=len(profiles)) as sp:
+            self.placement = plan_expert_placement(
+                profiles,
+                [gs.coe.hbm_budget.weights_bytes for gs in self.groups],
+                machine=self.machine, tp=self.topology.tp,
+                avg_tokens=self.avg_tokens,
+                replicate_share=self.replicate_share)
+            sp.add(resident={g: list(v) for g, v in
+                             self.placement.resident.items()})
+        trace.instant("placement", cat="node",
+                      groups=len(self.groups), experts=len(profiles))
         return self.placement
 
     def rebalance(self) -> Placement:
         """Replan from the demand observed so far and prewarm each group's
         cache with one planned-resident expert (async prefetch — never
         blocks decode)."""
-        placement = self.plan(dict(self.demand))
-        for gs in self.groups:
-            for name in placement.resident.get(gs.group.gid, ()):
-                if not gs.coe.cache.resident(name):
-                    gs.coe.cache.prefetch(name)
-                    break
+        with trace.span("rebalance", cat="node",
+                        demand_experts=len(self.demand)):
+            placement = self.plan(dict(self.demand))
+            for gs in self.groups:
+                for name in placement.resident.get(gs.group.gid, ()):
+                    if not gs.coe.cache.resident(name):
+                        gs.coe.cache.prefetch(name)
+                        trace.instant("prewarm", cat="node",
+                                      group=gs.group.gid, expert=name)
+                        break
         return placement
 
     # -- serving ----------------------------------------------------------
@@ -157,18 +196,21 @@ class RDUNode:
         Returns the chosen group id."""
         if self.placement is None:
             self.plan(dict(self.demand))
-        if req.expert is None:
-            req.expert, dt = self.groups[0].coe.route_request(req.tokens)
-            self.route_s += dt
-        elif req.expert not in self.groups[0].coe.experts:
-            raise KeyError(f"request {req.rid}: unknown expert {req.expert!r}")
-        self.demand[req.expert] = self.demand.get(req.expert, 0) + 1
-        owners = self.placement.owners(req.expert) or tuple(
-            range(len(self.groups)))
-        gid = min(owners, key=lambda g: self.groups[g].load)
-        self.groups[gid].engine.submit(req)
-        self.groups[gid].submitted += 1
-        self.requests_in += 1
+        with trace.span("dispatch", cat="node", request_id=req.rid) as sp:
+            if req.expert is None:
+                req.expert, dt = self.groups[0].coe.route_request(req.tokens)
+                self.route_s += dt
+            elif req.expert not in self.groups[0].coe.experts:
+                raise KeyError(
+                    f"request {req.rid}: unknown expert {req.expert!r}")
+            self.demand[req.expert] = self.demand.get(req.expert, 0) + 1
+            owners = self.placement.owners(req.expert) or tuple(
+                range(len(self.groups)))
+            gid = min(owners, key=lambda g: self.groups[g].load)
+            sp.add(expert=req.expert, group=gid)
+            self.groups[gid].engine.submit(req)
+            self.groups[gid].submitted += 1
+            self.requests_in += 1
         return gid
 
     @property
@@ -224,6 +266,7 @@ class RDUNode:
                 "hbm_used_bytes": gs.coe.cache.used_bytes,
             })
         return NodeStats(
+            registry=self.registry,
             requests=sum(g["requests"] for g in per_group),
             tokens_out=sum(g["tokens_out"] for g in per_group),
             route_s=self.route_s,

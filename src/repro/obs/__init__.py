@@ -1,0 +1,37 @@
+"""Unified observability layer: metrics registry, span tracing, tier ledger.
+
+The paper's claims are measurement claims (Fig 1 switch/execute split,
+Fig 9 prefetch overlap, Fig 12-13 switching/footprint curves); this package
+is where the repro attributes every millisecond and byte:
+
+  * ``obs.metrics``  — ``MetricsRegistry``: counters / gauges / streaming-
+    quantile histograms, labeled (expert, socket group, tier), with a
+    process default registry and ``scoped()`` test isolation;
+  * ``obs.trace``    — ``span()`` context managers recording into per-thread
+    ring buffers, exported as Chrome-trace / Perfetto JSON;
+  * ``obs.ledger``   — ``TransferLedger``: every DDR->host / host->HBM /
+    writeback transfer byte-and-latency-attributed on one view, with
+    derived bandwidth gauges and the overlap ratio first-class;
+  * ``obs.stats``    — the registry-backed view machinery behind
+    ``ServeStats`` / ``SwitchStats`` / ``NodeStats`` / ``PagedStats`` and
+    the shared ``as_dict`` serializer;
+  * ``obs.httpd``    — the ``--metrics-port`` Prometheus/JSON endpoint.
+
+See ``docs/observability.md`` for the metric catalog and span taxonomy.
+"""
+from repro.obs import trace
+from repro.obs.httpd import MetricsServer, serve_metrics
+from repro.obs.ledger import TransferLedger
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               get_registry, scoped, set_registry)
+from repro.obs.stats import (StatsView, as_dict, counter_field, gauge_field,
+                             stat_field)
+
+__all__ = [
+    "trace",
+    "MetricsServer", "serve_metrics",
+    "TransferLedger",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "scoped", "set_registry",
+    "StatsView", "as_dict", "counter_field", "gauge_field", "stat_field",
+]

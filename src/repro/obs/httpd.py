@@ -1,0 +1,79 @@
+"""Metrics snapshot endpoint (``launch/serve.py --metrics-port``).
+
+Serves a registry over HTTP on a background thread:
+
+    GET /metrics        Prometheus text exposition
+    GET /metrics.json   flat JSON snapshot (same keys the bench JSONs use)
+    GET /healthz        liveness probe
+
+Stdlib-only (``http.server``); fine for scrape-rate traffic, not a
+user-facing proxy.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry
+
+
+class MetricsServer:
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1"):
+        reg = registry
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path in ("/", "/metrics"):
+                    body = reg.to_prometheus().encode()
+                    ctype = "text/plain; version=0.0.4"
+                elif self.path == "/metrics.json":
+                    body = json.dumps(reg.snapshot(), indent=1).encode()
+                    ctype = "application/json"
+                elif self.path == "/healthz":
+                    body, ctype = b"ok\n", "text/plain"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):       # scrapes are not news
+                pass
+
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host, port = self._httpd.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def start(self) -> "MetricsServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="metrics-httpd", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+
+def serve_metrics(registry: MetricsRegistry, port: int = 0,
+                  host: str = "127.0.0.1") -> MetricsServer:
+    """Start serving ``registry`` in the background; returns the server
+    (``.port`` for the bound port, ``.stop()`` to shut down)."""
+    return MetricsServer(registry, port, host).start()

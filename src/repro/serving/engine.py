@@ -42,6 +42,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.coe import CompositionOfExperts
+from repro.obs import trace
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import StatsView, counter_field
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.speculative import SpecStats
 
@@ -77,19 +80,24 @@ class _Slot:
         return self.req.max_new_tokens - len(self.generated)
 
 
-@dataclass
-class ServeStats:
-    requests: int = 0
-    tokens_out: int = 0
-    admitted: int = 0
-    decode_rounds: int = 0
-    switches: int = 0
-    starvation_overrides: int = 0
-    occupancy_sum: float = 0.0          # Σ active_slots/n_slots per round
-    route_s: float = 0.0
-    switch_s: float = 0.0
-    prefill_s: float = 0.0
-    exec_s: float = 0.0
+class ServeStats(StatsView):
+    """Engine counters as a view over the metrics registry (``serve.*``
+    series). Field semantics unchanged from the old dataclass."""
+
+    PREFIX = "serve"
+    DERIVED = ("tokens_per_second", "mean_occupancy")
+
+    requests = counter_field()
+    tokens_out = counter_field()
+    admitted = counter_field()
+    decode_rounds = counter_field()
+    switches = counter_field()
+    starvation_overrides = counter_field()
+    occupancy_sum = counter_field(0.0)  # Σ active_slots/n_slots per round
+    route_s = counter_field(0.0)
+    switch_s = counter_field(0.0)
+    prefill_s = counter_field(0.0)
+    exec_s = counter_field(0.0)
 
     @property
     def tokens_per_second(self):
@@ -372,7 +380,9 @@ class ServingEngine:
                  switch_quantum: int = 8, starvation_limit: int = 16,
                  runner: Optional[PagedDecodeRunner] = None,
                  runner_factory=None,
-                 kv_dtype=jnp.bfloat16):
+                 kv_dtype=jnp.bfloat16,
+                 registry: Optional[MetricsRegistry] = None,
+                 obs_labels: Optional[Dict[str, Any]] = None):
         if scheduler not in ("continuous", "run_to_completion"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.coe = coe
@@ -394,9 +404,15 @@ class ServingEngine:
                 * PagedKVCache.block_bytes(
                     block_size, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
                     kv_dtype))
+        # one registry backs the engine's ServeStats and the pool's
+        # PagedStats (private unless the caller publishes a shared one —
+        # serve.py --metrics-port and RDUNode, which labels per group)
+        self._registry = registry if registry is not None else MetricsRegistry()
+        self._obs_labels = dict(obs_labels or {})
         self.pool = PagedKVCache.for_budget(
             kv_budget_bytes, block_size, cfg.n_layers, cfg.n_kv_heads,
-            cfg.head_dim, kv_dtype, scratch=True)
+            cfg.head_dim, kv_dtype, scratch=True,
+            registry=self._registry, labels=self._obs_labels)
         self._empty_table = np.full((self.max_blocks,),
                                     self.pool.scratch_index, np.int32)
         # runner_factory lets a caller supply a runner that needs the pool's
@@ -413,7 +429,8 @@ class ServingEngine:
 
         self.queue: List[Request] = []
         self.slots: List[Optional[_Slot]] = [None] * n_slots
-        self.stats = ServeStats()
+        self.stats = ServeStats(registry=self._registry,
+                                labels=self._obs_labels)
         self._active_expert: Optional[str] = None
         self._quantum_used = 0
         self._step_count = 0
@@ -434,11 +451,17 @@ class ServingEngine:
             raise ValueError(
                 f"request {req.rid} needs more KV blocks than the pool owns")
         if req.expert is None:
-            req.expert, dt = self.coe.route_request(req.tokens)
+            with trace.span("route", cat="engine", request_id=req.rid) as sp:
+                req.expert, dt = self.coe.route_request(req.tokens)
+                sp.add(expert=req.expert)
             self.stats.route_s += dt
         elif req.expert not in self.coe.experts:
             raise KeyError(
                 f"request {req.rid}: unknown expert {req.expert!r}")
+        # one async lane per request: submit -> ... -> done (closed by
+        # _finish, possibly many scheduler steps later)
+        trace.async_begin("request", id=req.rid, cat="engine",
+                          expert=req.expert, prompt_tokens=len(req.tokens))
         self.queue.append(req)
 
     @property
@@ -449,19 +472,22 @@ class ServingEngine:
         """One scheduler iteration; returns requests completed in it."""
         self._step_count += 1
         done: List[Request] = []
-        name = self._pick_expert()
-        if name is None:
-            return done
-        if name != self._active_expert:
-            self._switch_to(name)
-        self._admit(done)
-        self._prefetch_next()
-        active = np.array([s is not None and s.expert == self._active_expert
-                           for s in self.slots], bool)
-        if active.any():
-            self._decode_round(active, done)
-        self._quantum_used += 1
-        self.stats.requests += len(done)
+        with trace.span("step", cat="engine", step=self._step_count) as sp:
+            name = self._pick_expert()
+            if name is None:
+                return done
+            if name != self._active_expert:
+                self._switch_to(name)
+            self._admit(done)
+            self._prefetch_next()
+            active = np.array([s is not None
+                               and s.expert == self._active_expert
+                               for s in self.slots], bool)
+            if active.any():
+                self._decode_round(active, done)
+            self._quantum_used += 1
+            self.stats.requests += len(done)
+            sp.add(expert=self._active_expert, completed=len(done))
         return done
 
     def drain(self, max_steps: int = 1_000_000) -> List[Request]:
@@ -523,7 +549,9 @@ class ServingEngine:
 
     def _switch_to(self, name: str):
         t0 = time.perf_counter()
-        self._params = self.coe.cache.activate(name)
+        with trace.span("switch", cat="engine", expert=name,
+                        prev=self._active_expert):
+            self._params = self.coe.cache.activate(name)
         self.stats.switch_s += time.perf_counter() - t0
         if self._active_expert is not None:
             self.stats.switches += 1
@@ -571,6 +599,8 @@ class ServingEngine:
 
     def _prefill_into_slot(self, slot_idx: int, req: Request,
                            done: List[Request]):
+        trace.instant("admit", cat="engine", request_id=req.rid,
+                      expert=req.expert, slot=slot_idx)
         t0 = time.perf_counter()
         params = self.coe.cache.activate(req.expert)
         if (req.expert != self._active_expert
@@ -581,15 +611,18 @@ class ServingEngine:
             self._params = self.coe.cache.activate(self._active_expert)
         self.stats.switch_s += time.perf_counter() - t0
         t0 = time.perf_counter()
-        last, k, v = self.runner.prefill_kv(params,
-                                            jnp.asarray(req.tokens[None]))
-        first = int(jnp.argmax(last))
-        self.pool.open(req.rid)
-        self.pool.append(req.rid, k, v)
-        # commit the request's whole block budget now so admission's
-        # free_blocks check can never over-admit into mid-decode exhaustion
-        self.pool.reserve(req.rid,
-                          req.max_new_tokens + self.policy.reserve_slack)
+        with trace.span("prefill", cat="engine", request_id=req.rid,
+                        expert=req.expert, prompt_tokens=len(req.tokens)):
+            last, k, v = self.runner.prefill_kv(params,
+                                                jnp.asarray(req.tokens[None]))
+            first = int(jnp.argmax(last))
+            self.pool.open(req.rid)
+            self.pool.append(req.rid, k, v)
+            # commit the request's whole block budget now so admission's
+            # free_blocks check can never over-admit into mid-decode
+            # exhaustion
+            self.pool.reserve(req.rid,
+                              req.max_new_tokens + self.policy.reserve_slack)
         self.stats.prefill_s += time.perf_counter() - t0
         now = time.perf_counter()
         req.prefill_done_s = now
@@ -650,7 +683,9 @@ class ServingEngine:
 
     def _decode_round(self, active: np.ndarray, done: List[Request]):
         t0 = time.perf_counter()
-        emits = self.policy.round(self._params, active)
+        with trace.span("decode", cat="engine", expert=self._active_expert,
+                        active_slots=int(active.sum())):
+            emits = self.policy.round(self._params, active)
         for i, toks in emits.items():
             slot = self.slots[i]
             n = len(toks)
@@ -674,4 +709,7 @@ class ServingEngine:
         req.done_s = time.perf_counter()
         self.pool.free(req.rid)
         self.policy.on_free(req.rid)
+        trace.async_end("request", id=req.rid, cat="engine",
+                        tokens_out=len(req.output),
+                        latency_s=req.latency_s)
         done.append(req)

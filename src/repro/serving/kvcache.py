@@ -25,26 +25,27 @@ lanes scatter there so a single compiled step can serve any slot subset.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stats import StatsView, counter_field, gauge_field
 
-@dataclass
-class PagedStats:
-    allocs: int = 0
-    frees: int = 0
-    blocks_in_use: int = 0
-    peak_blocks: int = 0
 
-    def as_dict(self):
-        """Same serialization surface as ``SwitchStats`` — benchmark JSON
-        rows embed both."""
-        return dataclasses.asdict(self)
+class PagedStats(StatsView):
+    """KV-pool counters as a view over the metrics registry (``kv.*``
+    series). Same serialization surface as ``SwitchStats`` — benchmark
+    JSON rows embed both."""
+
+    PREFIX = "kv"
+
+    allocs = counter_field()
+    frees = counter_field()
+    blocks_in_use = gauge_field()
+    peak_blocks = gauge_field()
 
 
 class PagedKVCache:
@@ -52,7 +53,9 @@ class PagedKVCache:
 
     def __init__(self, n_blocks: int, block_size: int, n_layers: int,
                  kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
-                 scratch: bool = False):
+                 scratch: bool = False,
+                 registry: Optional[MetricsRegistry] = None,
+                 labels: Optional[Dict[str, Any]] = None):
         self.n_blocks = n_blocks
         self.block = block_size
         rows = n_blocks + (1 if scratch else 0)
@@ -63,7 +66,7 @@ class PagedKVCache:
         self._free: List[int] = list(range(n_blocks))[::-1]
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
-        self.stats = PagedStats()
+        self.stats = PagedStats(registry=registry, labels=labels)
 
     # -- sizing ------------------------------------------------------------
     @staticmethod
@@ -76,7 +79,9 @@ class PagedKVCache:
     @classmethod
     def for_budget(cls, budget_bytes: int, block_size: int, n_layers: int,
                    kv_heads: int, head_dim: int, dtype=jnp.bfloat16,
-                   scratch: bool = False) -> "PagedKVCache":
+                   scratch: bool = False,
+                   registry: Optional[MetricsRegistry] = None,
+                   labels: Optional[Dict[str, Any]] = None) -> "PagedKVCache":
         """Largest pool whose K+V arrays fit in ``budget_bytes`` (the KV share
         of the HBM tier from ``core.memory_tiers.plan_hbm_budget``). The
         scratch row, when requested, counts against the budget."""
@@ -87,7 +92,7 @@ class PagedKVCache:
                 f"KV budget {budget_bytes} bytes < "
                 f"{'scratch + ' if scratch else ''}one block ({per} bytes)")
         return cls(n_blocks, block_size, n_layers, kv_heads, head_dim,
-                   dtype, scratch=scratch)
+                   dtype, scratch=scratch, registry=registry, labels=labels)
 
     # -- bookkeeping -------------------------------------------------------
     @property

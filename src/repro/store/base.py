@@ -22,12 +22,13 @@ executor; ``put``/``delete`` are caller-thread operations.
 from __future__ import annotations
 
 import abc
-import dataclasses
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List
 
 import numpy as np
+
+from repro.obs.stats import as_dict as _shared_as_dict
 
 
 @dataclass
@@ -38,7 +39,7 @@ class StoreStats:
     bytes_written: int = 0
 
     def as_dict(self):
-        return dataclasses.asdict(self)
+        return _shared_as_dict(self)
 
 
 def host_tree_bytes(tree) -> int:

@@ -24,6 +24,7 @@ from typing import Any, Dict
 
 import numpy as np
 
+from repro.obs import trace
 from repro.store.base import ExpertStore, host_tree_bytes
 
 
@@ -101,9 +102,11 @@ class Int8BlockQuantizedStore(ExpertStore):
     def get(self, name):
         import jax
         qtree = self._trees[name]
-        tree = jax.tree.map(
-            lambda x: _dequantize(x) if isinstance(x, _QLeaf) else x,
-            qtree, is_leaf=lambda x: isinstance(x, _QLeaf))
+        with trace.span("dequant", cat="store", expert=name,
+                        stored_bytes=self._stored[name]):
+            tree = jax.tree.map(
+                lambda x: _dequantize(x) if isinstance(x, _QLeaf) else x,
+                qtree, is_leaf=lambda x: isinstance(x, _QLeaf))
         self._note_read(self._stored[name])
         return tree
 

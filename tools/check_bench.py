@@ -3,13 +3,19 @@
 Compares the flat ``metrics`` dict of one or more benchmark result JSONs
 (``results/bench_arrival.json``, ``results/bench_switching.json`` — written
 by ``benchmarks/run.py --sweep-arrival / --sweep-switching``) against the
-committed reference in ``benchmarks/baseline.json``. Every metric is
-higher-is-better (throughput, overlap ratios); the gate fails when
+committed reference in ``benchmarks/baseline.json``. Metrics are
+higher-is-better by default (throughput, overlap ratios); the gate fails
+when
 
     current < baseline_value * (1 - threshold)
 
 i.e. a >``threshold`` regression (default 30%). Baseline entries are either
-a bare number or ``{"value": x, "threshold": y}`` for a per-metric band.
+a bare number or ``{"value": x, "threshold": y}`` for a per-metric band;
+a dict entry may also set ``"higher_is_better": false`` (latency, stall
+seconds), flipping the gate to fail when
+
+    current > baseline_value * (1 + threshold)
+
 A baseline metric missing from the results is a failure too — a silently
 dropped benchmark must not pass the gate.
 
@@ -42,22 +48,31 @@ def check(current: dict, baseline: dict, threshold: float):
     """Returns (failures, lines): failure strings + a full report."""
     failures, lines = [], []
     for name, ref in sorted(baseline.items()):
+        higher = True
         if isinstance(ref, dict):
             ref_value, band = float(ref["value"]), float(
                 ref.get("threshold", threshold))
+            higher = bool(ref.get("higher_is_better", True))
         else:
             ref_value, band = float(ref), threshold
-        floor = ref_value * (1.0 - band)
         if name not in current:
             failures.append(f"MISSING  {name}: not in results "
                             f"(baseline {ref_value:g})")
             continue
         cur = float(current[name])
-        verdict = "ok" if cur >= floor else "REGRESSION"
+        if higher:
+            bound = ref_value * (1.0 - band)
+            ok = cur >= bound
+            kind = "floor"
+        else:
+            bound = ref_value * (1.0 + band)
+            ok = cur <= bound
+            kind = "ceiling"
+        verdict = "ok" if ok else "REGRESSION"
         lines.append(f"{verdict:10s} {name}: {cur:.3f} "
-                     f"(baseline {ref_value:g}, floor {floor:.3f}, "
+                     f"(baseline {ref_value:g}, {kind} {bound:.3f}, "
                      f"band {band:.0%})")
-        if cur < floor:
+        if not ok:
             failures.append(lines[-1])
     extra = sorted(set(current) - set(baseline))
     for name in extra:
