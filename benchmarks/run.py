@@ -459,18 +459,31 @@ def bench_sweep_switching(tiny: bool = False):
 # ----------------------------------------------------------------------
 # Arrival-rate sweep: run-to-completion vs continuous batching (§VI-C)
 # ----------------------------------------------------------------------
-def bench_sweep_arrival(tiny: bool = False):
+def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
     """Offered-load sweep over the serving engine. One Poisson request trace
     per offered rate (requests/s; ``inf`` = burst, every request queued at
     t=0) is replayed against BOTH schedulers on the same paged KV substrate
     and the same compiled step functions — the measured difference is pure
     scheduling. Emits achieved tokens/s and p50/p99 request latency; the
     final row is the continuous/run-to-completion throughput ratio at the
-    highest offered load (the paper's keep-the-chip-busy claim)."""
+    highest offered load (the paper's keep-the-chip-busy claim).
+
+    A second, fused-vs-unfused axis (the Fig-6 analogue) replays one fixed
+    burst through the serving backends selected by ``backend`` ('xla' /
+    'fused' / 'both'): per backend it records achieved tokens/s, the
+    measured HBM traffic of one compiled decode step, and the measured
+    operational intensity next to ``core/fusion.py``'s predictions. These
+    runs use float32 weights and KV (the backends' strict-parity dtype —
+    see ``serving/backends.py``), so with ``backend='both'`` the greedy
+    token streams are asserted identical across backends."""
+    import hashlib
+
     from repro.configs import get_config, reduced
     from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+    from repro.core.fusion import backend_prediction
     from repro.models import get_model
     from repro.serving import Request, ServingEngine
+    from repro.serving.backends import fused_kernel_hbm_bytes
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
     m = get_model(cfg)
@@ -569,6 +582,84 @@ def bench_sweep_arrival(tiny: bool = False):
     emit("sweep_continuous_vs_rtc_highest_load", 0.0,
          f"throughput_ratio={ratio:.2f}x_at_burst")
 
+    # ---- fused-vs-unfused axis (Fig-6 analogue) -------------------------
+    # float32 weights + KV: the backends' strict-parity dtype, so greedy
+    # token streams must be identical across backends (bf16 parity is
+    # fp-tolerance only — the XLA body rounds every op boundary to bf16
+    # while the fused kernels keep activations f32 in VMEM)
+    backends = {"xla": ["xla"], "fused": ["fused"],
+                "both": ["xla", "fused"]}[backend]
+    f32 = lambda t: jax.tree.map(
+        lambda x: np.asarray(x, np.float32)
+        if x.dtype == jnp.bfloat16 else np.asarray(x), t)
+    experts32 = [f32(e) for e in experts]
+    nbytes32 = sum(x.nbytes for x in jax.tree.leaves(experts32[0]))
+    n_freq = 6 if tiny else 12
+    fus_trace = [(rs.randint(0, cfg.vocab_size, (10,)).astype(np.int32),
+                  int(rs.randint(6, 18))) for _ in range(n_freq)]
+
+    fus_rows, digests = [], {}
+    for bk in backends:
+        coe = CompositionOfExperts(HashRouter(n_exp), None,
+                                   int(2.5 * nbytes32))
+        for i, h in enumerate(experts32):
+            coe.register(ExpertHandle(f"e{i}", cfg, h))
+        eng = ServingEngine(coe, cfg, max_len=32, n_slots=4, block_size=8,
+                            backend=bk, kv_dtype=jnp.float32)
+        # warm the compile cache outside the timed window
+        eng.submit(Request(rid=10_000, tokens=np.zeros(10, np.int32),
+                           max_new_tokens=2))
+        eng.drain()
+        eng.stats.reset()
+        t0 = time.perf_counter()
+        for rid, (toks, n_new) in enumerate(fus_trace):
+            eng.submit(Request(rid=rid, tokens=toks, max_new_tokens=n_new))
+        fdone = eng.drain()
+        wall = time.perf_counter() - t0
+        tps = sum(r.max_new_tokens for r in fdone) / wall
+        outs = {r.rid: r.output for r in fdone}
+        digests[bk] = hashlib.sha256(
+            b"".join(outs[i].tobytes() for i in sorted(outs))).hexdigest()[:16]
+
+        # measured HBM traffic of one compiled (n_slots, 1) decode step.
+        # xla: the compiled step's XLA cost model. fused: XLA treats Pallas
+        # calls as opaque (and the CPU interpret-mode lowering inflates
+        # them), so the exact DMA accounting of the kernels' grid x
+        # BlockSpec tiles is used instead — the step is kernel-dominated
+        # (only the K/V scatter and embed/head stay outside them)
+        B, ctx = eng.n_slots, eng.max_blocks * eng.block
+        if bk == "fused":
+            step_bytes = float(fused_kernel_hbm_bytes(
+                cfg, B, eng.max_blocks, eng.block, kv_itemsize=4,
+                p_itemsize=4, act_itemsize=4))
+            measurement = "pallas_dma_accounting"
+        else:
+            cost = eng.runner.step_cost_analysis((eng.n_slots, 1)) or {}
+            step_bytes = float(cost.get("bytes accessed", 0.0))
+            measurement = "xla_cost_analysis"
+        pred = backend_prediction(cfg, B, ctx, bk, dtype_bytes=4)
+        intensity = pred["flops"] / step_bytes if step_bytes else 0.0
+        fus_rows.append({
+            "backend": bk, "tokens_per_s": tps, "wall_s": wall,
+            "measured_step_bytes": step_bytes,
+            "measured_intensity": intensity,
+            "measurement": measurement,
+            "predicted_step_bytes": pred["predicted_hbm_bytes"],
+            "predicted_intensity": pred["predicted_intensity"],
+            "flops_per_step": pred["flops"],
+            "token_digest": digests[bk]})
+        emit(f"sweep_fusion_{bk}", wall * 1e6,
+             f"tokens/s={tps:.1f},measured_MB_per_step={step_bytes/1e6:.2f},"
+             f"measured_intensity={intensity:.1f},"
+             f"predicted_intensity={pred['predicted_intensity']:.1f}")
+    if len(backends) == 2:
+        if digests["xla"] != digests["fused"]:
+            raise AssertionError(
+                "fused backend diverged from xla greedy token streams "
+                f"(digest {digests['fused']} != {digests['xla']})")
+        emit("sweep_fusion_parity", 0.0,
+             f"tokens_identical=1,digest={digests['xla']}")
+
     rows = []
     for (sched, lam), b in best.items():
         rows.append({"scheduler": sched,
@@ -582,12 +673,26 @@ def bench_sweep_arrival(tiny: bool = False):
         "arrival:continuous_vs_rtc_ratio": ratio,
         "arrival:continuous:p99_s@burst": best[("continuous", hi)]["p99"],
     }
+    if "fused" in digests:
+        frow = next(r for r in fus_rows if r["backend"] == "fused")
+        metrics["arrival:fused:tps@burst"] = frow["tokens_per_s"]
+        metrics["arrival:fused:measured_intensity"] = \
+            frow["measured_intensity"]
+    if len(backends) == 2:
+        xrow = next(r for r in fus_rows if r["backend"] == "xla")
+        metrics["arrival:fused:tokens_identical"] = 1.0
+        metrics["arrival:fused:intensity_ratio"] = (
+            frow["measured_intensity"] / xrow["measured_intensity"]
+            if xrow["measured_intensity"] else 0.0)
     doc = {"schema": 1,
            "config": {"arch": "samba-coe-expert-7b(reduced)",
                       "n_requests": n_req, "repeats": repeats,
                       "loads": ["inf" if np.isinf(l) else l for l in loads],
-                      "tiny": tiny},
-           "rows": rows, "metrics": _gated_metrics(metrics)}
+                      "tiny": tiny, "backend_axis": backends},
+           "rows": rows,
+           "fusion_axis": {"dtype": "float32", "n_requests": n_freq,
+                           "rows": fus_rows},
+           "metrics": _gated_metrics(metrics)}
     (_results_dir() / "bench_arrival.json").write_text(
         json.dumps(doc, indent=1))
 
@@ -717,6 +822,12 @@ def main(argv=None) -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized sweep configs (fewer experts/requests/"
                          "repeats); used by the bench-smoke CI job")
+    ap.add_argument("--backend", default="both",
+                    choices=["xla", "fused", "both"],
+                    help="decode backends for the --sweep-arrival fusion "
+                         "axis (serving/backends.py); 'both' additionally "
+                         "asserts the greedy token streams are identical "
+                         "across backends")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record engine/cache/node spans while benching and "
                          "export a Chrome-trace / Perfetto JSON here "
@@ -747,7 +858,7 @@ def main(argv=None) -> None:
     any_sweep = args.sweep_arrival or args.sweep_switching or args.sweep_node
     if any_sweep:
         if args.sweep_arrival:
-            bench_sweep_arrival(tiny=args.tiny)
+            bench_sweep_arrival(tiny=args.tiny, backend=args.backend)
         if args.sweep_switching:
             bench_sweep_switching(tiny=args.tiny)
         if args.sweep_node:

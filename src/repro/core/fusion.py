@@ -126,8 +126,9 @@ class FusionReport:
         return self.flops / self.fused_hbm_bytes
 
 
-def plan(cfg: ModelConfig, batch: int, ctx: int, seq: int = 1) -> FusionReport:
-    ops = decoder_layer_ops(cfg, batch, ctx, seq)
+def plan(cfg: ModelConfig, batch: int, ctx: int, seq: int = 1,
+         dtype_bytes: int = 2) -> FusionReport:
+    ops = decoder_layer_ops(cfg, batch, ctx, seq, dtype_bytes)
     by_name: Dict[str, Op] = {o.name: o for o in ops}
     flops = sum(o.flops for o in ops)
     unfused_bytes = sum(o.total_bytes for o in ops)
@@ -156,13 +157,14 @@ def plan(cfg: ModelConfig, batch: int, ctx: int, seq: int = 1) -> FusionReport:
 
 
 def model_fusion_report(cfg: ModelConfig, batch: int, ctx: int,
-                        seq: int = 1) -> FusionReport:
+                        seq: int = 1, dtype_bytes: int = 2) -> FusionReport:
     """Whole-model per-step report (layers x per-layer + embed/head)."""
-    r = plan(cfg, batch, ctx, seq)
+    r = plan(cfg, batch, ctx, seq, dtype_bytes)
     L = cfg.n_layers
     T = batch * seq
     head_flops = 2 * T * cfg.d_model * cfg.vocab_size
-    head_bytes = cfg.d_model * cfg.vocab_size * 2 + T * cfg.vocab_size * 2
+    head_bytes = (cfg.d_model * cfg.vocab_size + T * cfg.vocab_size) \
+        * dtype_bytes
     return FusionReport(
         unfused_kernels=r.unfused_kernels * L + 2,
         fused_kernels=r.fused_kernels * L + 2,
@@ -170,3 +172,25 @@ def model_fusion_report(cfg: ModelConfig, batch: int, ctx: int,
         fused_hbm_bytes=r.fused_hbm_bytes * L + head_bytes,
         flops=r.flops * L + head_flops,
     )
+
+
+def backend_prediction(cfg: ModelConfig, batch: int, ctx: int,
+                       backend: str, seq: int = 1,
+                       dtype_bytes: int = 2) -> Dict[str, float]:
+    """Model-predicted per-decode-step HBM bytes and operational intensity
+    for a serving backend (``serving/backends.py``): 'xla' executes the
+    unfused op graph (every inter-op activation round-trips to HBM), 'fused'
+    the Pallas mega-kernel plan (activations stay in VMEM inside each
+    ``FUSED_GROUPS`` entry). The Fig-6 fused-vs-unfused sweep prints these
+    next to the measured traffic of the compiled step."""
+    r = model_fusion_report(cfg, batch, ctx, seq, dtype_bytes)
+    fused = backend == "fused"
+    return {
+        "backend": backend,
+        "predicted_hbm_bytes": r.fused_hbm_bytes if fused
+        else r.unfused_hbm_bytes,
+        "predicted_intensity": r.intensity_fused if fused
+        else r.intensity_unfused,
+        "predicted_kernels": r.fused_kernels if fused else r.unfused_kernels,
+        "flops": r.flops,
+    }

@@ -6,13 +6,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_prefill, flash_decode
-
-
-def _interp(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.flash_attention.kernel import (flash_prefill, flash_decode,
+                                                  flash_decode_paged)
+from repro.kernels.runtime import resolve_interpret as _interp
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
@@ -46,3 +42,22 @@ def decode(q, k_cache, v_cache, length, *, block_k=512, interpret=None):
                                          interpret=_interp(interpret))
     o = jax.vmap(fn)(qg, kg, vg)                               # (Hkv,B,G,dh)
     return o.transpose(1, 0, 2, 3).reshape(B, Hq, dh)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_paged(q, k_pool, v_pool, tables, len1, *, interpret=None):
+    """Paged-native GQA decode: q (B,Hq,dh) against the block pool.
+
+    k_pool/v_pool (rows, block, Hkv, dh) — ``PagedKVCache`` arrays;
+    tables (B, maxb) int32 padded with the scratch row; len1 (B,) int32 =
+    per-lane valid positions (length + 1 after this step's scatter).
+    Returns (B, Hq, dh). Queries are grouped (B, Hkv, G, dh) so each kv
+    head's tile serves its whole q-head group from one gather.
+    """
+    B, Hq, dh = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, dh)
+    o = flash_decode_paged(qg, k_pool, v_pool, tables, len1,
+                           interpret=_interp(interpret))
+    return o.reshape(B, Hq, dh)

@@ -16,8 +16,18 @@ Kernels:
     weights, the theoretical HBM minimum.
 
 The attention itself is ``kernels/flash_attention.flash_decode`` (cache
-streaming at HBM bandwidth). The output projection is left to XLA: its cost
-is one read of Wo — already optimal, fusion buys nothing there.
+streaming at HBM bandwidth).
+
+Paged-native variants (what ``serving.backends.FusedPagedBackend`` runs —
+these take the engine's layouts directly, no weight concat / cache copy):
+  * ``qkv_rope_paged``: per-lane positions (decode lanes sit at ragged
+    depths) and the native separate wq/wk/wv (D,H,dh) weights, streamed one
+    head per grid step via clamped per-segment index maps.
+  * ``oproj_ffn_swiglu``: the whole layer epilogue — attention out-proj +
+    residual + RMSNorm + SwiGLU + residual — with the post-attention
+    activation pinned in VMEM between the two residual adds.
+  * ``ffn_swiglu(residual=False)``: the tensor-parallel partial form (down-
+    proj partials psum'd across shards before the residual).
 """
 from __future__ import annotations
 
@@ -86,11 +96,89 @@ def qkv_rope(x, norm_scale, w_qkv, pos, *, n_q, n_kv, dh, theta=10000.0,
 
 
 # ----------------------------------------------------------------------
+# paged-native norm + qkv + rope (per-lane positions, unconcatenated weights)
+# ----------------------------------------------------------------------
+
+def _qkv_paged_kernel(pos_ref, x_ref, scale_ref, inv_ref, wq_ref, wk_ref,
+                      wv_ref, o_ref, *, n_q, n_kv):
+    h = pl.program_id(0)
+    xn = _rms(x_ref[...], scale_ref[...])                  # (B, D) f32
+    # all three weight blocks are VMEM-resident each step, but their index
+    # maps clamp outside their own segment — Pallas only re-DMAs a block
+    # when its mapped index CHANGES, so each weight byte streams exactly once
+    wq = wq_ref[:, 0, :].astype(jnp.float32)
+    wk = wk_ref[:, 0, :].astype(jnp.float32)
+    wv = wv_ref[:, 0, :].astype(jnp.float32)
+    w = jnp.where(h < n_q, wq, jnp.where(h < n_q + n_kv, wk, wv))
+    y = jnp.dot(xn, w)                                     # (B, dh)
+
+    # per-lane rotary: angles from each lane's own position (decode lanes sit
+    # at ragged depths in the paged pool — there is no shared position scalar)
+    inv = inv_ref[...]                                     # (rot/2,) f32
+    rot = 2 * inv.shape[0]
+    ang = pos_ref[...].astype(jnp.float32)[:, None] * inv[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)                  # (B, rot/2)
+    y1, y2, yp = y[:, : rot // 2], y[:, rot // 2: rot], y[:, rot:]
+    yr = jnp.concatenate([y1 * cos - y2 * sin, y2 * cos + y1 * sin, yp],
+                         axis=-1)
+    is_v = h >= (n_q + n_kv)
+    o_ref[0] = jnp.where(is_v, y, yr).astype(o_ref.dtype)
+
+
+def qkv_rope_paged(x, norm_scale, wq, wk, wv, pos, *, theta=10000.0,
+                   rope_frac=1.0, interpret=False):
+    """RMSNorm + QKV + per-lane RoPE for the paged decode step.
+
+    x (B,D); wq (D,n_q,dh), wk/wv (D,n_kv,dh) — the engine's NATIVE attention
+    param layout, streamed per head without materializing a fused [Wq|Wk|Wv]
+    concat; pos (B,) int32 per-lane positions. Returns (q (B,n_q,dh),
+    k (B,n_kv,dh), v (B,n_kv,dh)) with RoPE applied to q and k.
+    """
+    import numpy as np
+    B, D = x.shape
+    _, n_q, dh = wq.shape
+    n_kv = wk.shape[1]
+    H = n_q + 2 * n_kv
+    rot = int(dh * rope_frac)
+    rot -= rot % 2
+    # host-side inv_freq with the exact numpy arithmetic of
+    # models.layers._rope_angles, so fused and XLA paths agree bit-for-bit
+    inv_freq = (1.0 / (theta ** (np.arange(0, rot, 2) / rot))
+                ).astype(np.float32)
+    kernel = functools.partial(_qkv_paged_kernel, n_q=n_q, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((B,), lambda h: (0,)),
+            pl.BlockSpec((B, D), lambda h: (0, 0)),
+            pl.BlockSpec((D,), lambda h: (0,)),
+            pl.BlockSpec((rot // 2,), lambda h: (0,)),
+            pl.BlockSpec((D, 1, dh),
+                         lambda h: (0, jnp.minimum(h, n_q - 1), 0)),
+            pl.BlockSpec((D, 1, dh),
+                         lambda h: (0, jnp.clip(h - n_q, 0, n_kv - 1), 0)),
+            pl.BlockSpec((D, 1, dh),
+                         lambda h: (0, jnp.clip(h - n_q - n_kv, 0, n_kv - 1),
+                                    0)),
+        ],
+        out_specs=pl.BlockSpec((1, B, dh), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, B, dh), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), x, norm_scale, jnp.asarray(inv_freq),
+      wq, wk, wv)
+    q = out[:n_q].transpose(1, 0, 2)
+    k = out[n_q:n_q + n_kv].transpose(1, 0, 2)
+    v = out[n_q + n_kv:].transpose(1, 0, 2)
+    return q, k, v
+
+
+# ----------------------------------------------------------------------
 # norm + SwiGLU FFN + residual
 # ----------------------------------------------------------------------
 
 def _ffn_kernel(x_ref, scale_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref,
-                *, nf):
+                *, nf, residual):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -105,19 +193,26 @@ def _ffn_kernel(x_ref, scale_ref, wg_ref, wu_ref, wo_ref, o_ref, acc_ref,
 
     @pl.when(j == nf - 1)
     def _done():
-        o_ref[...] = (x_ref[...].astype(jnp.float32) + acc_ref[...]).astype(
-            o_ref.dtype)
+        out = acc_ref[...]
+        if residual:
+            out = x_ref[...].astype(jnp.float32) + out
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def ffn_swiglu(x, norm_scale, w_gate, w_up, w_down, *, block_f=512,
-               interpret=False):
-    """x (B,D) -> x + SwiGLU(RMSNorm(x)); single pass over FFN weights."""
+               residual=True, interpret=False):
+    """x (B,D) -> x + SwiGLU(RMSNorm(x)); single pass over FFN weights.
+
+    ``residual=False`` returns just SwiGLU(RMSNorm(x)) — the tensor-parallel
+    partial form, where the down-projection output must be psum'd across the
+    shards BEFORE the residual add (node/execution.py fused TP path).
+    """
     B, D = x.shape
     F = w_gate.shape[1]
     bf = min(block_f, F)
     assert F % bf == 0
     nf = F // bf
-    kernel = functools.partial(_ffn_kernel, nf=nf)
+    kernel = functools.partial(_ffn_kernel, nf=nf, residual=residual)
     return pl.pallas_call(
         kernel,
         grid=(nf,),
@@ -133,3 +228,76 @@ def ffn_swiglu(x, norm_scale, w_gate, w_up, w_down, *, block_f=512,
         scratch_shapes=[pltpu.VMEM((B, D), jnp.float32)],
         interpret=interpret,
     )(x, norm_scale, w_gate, w_up, w_down)
+
+
+# ----------------------------------------------------------------------
+# out-proj + residual + norm + SwiGLU FFN + residual (the layer epilogue)
+# ----------------------------------------------------------------------
+
+def _oproj_ffn_kernel(x_ref, attn_ref, wo_ref, scale_ref, wg_ref, wu_ref,
+                      wd_ref, o_ref, y_ref, acc_ref, *, nf):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        # attention epilogue once: y = x + attn @ Wo, then y persists in
+        # VMEM as both the FFN-norm input and the final residual base
+        y_ref[...] = x_ref[...].astype(jnp.float32) + jnp.dot(
+            attn_ref[...].astype(jnp.float32),
+            wo_ref[...].astype(jnp.float32))
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xn = y_ref[...] * jax.lax.rsqrt(
+        jnp.mean(y_ref[...] * y_ref[...], axis=-1, keepdims=True) + 1e-6
+    ) * scale_ref[...].astype(jnp.float32)
+    g = jnp.dot(xn, wg_ref[...].astype(jnp.float32))        # (B, bf)
+    u = jnp.dot(xn, wu_ref[...].astype(jnp.float32))
+    hidden = g * jax.nn.sigmoid(g) * u
+    acc_ref[...] += jnp.dot(hidden, wd_ref[...].astype(jnp.float32))
+
+    @pl.when(j == nf - 1)
+    def _done():
+        o_ref[...] = (y_ref[...] + acc_ref[...]).astype(o_ref.dtype)
+
+
+def oproj_ffn_swiglu(x, attn_out, w_o, norm_scale, w_gate, w_up, w_down, *,
+                     block_f=512, interpret=False):
+    """The whole decoder-layer epilogue in one kernel:
+
+        y = x + attn_out @ w_o                 (attention out-proj + residual)
+        return y + SwiGLU(RMSNorm(y))          (FFN + residual)
+
+    x (B,D); attn_out (B, Hq*dh); w_o (Hq*dh, D) — the engine's native
+    (Hq,dh,D) ``wo`` reshaped (contiguous, no copy). Wo's constant index map
+    keeps it VMEM-resident across the FFN grid, so it streams from HBM once;
+    ``y`` never round-trips to HBM between out-proj and FFN. (At full model
+    scale Wo would also be grid-tiled; the reduced configs this repo measures
+    fit it in VMEM whole.)
+    """
+    B, D = x.shape
+    HD = attn_out.shape[1]
+    F = w_gate.shape[1]
+    bf = min(block_f, F)
+    assert F % bf == 0
+    nf = F // bf
+    kernel = functools.partial(_oproj_ffn_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda j: (0, 0)),
+            pl.BlockSpec((B, HD), lambda j: (0, 0)),
+            pl.BlockSpec((HD, D), lambda j: (0, 0)),
+            pl.BlockSpec((D,), lambda j: (0,)),
+            pl.BlockSpec((D, bf), lambda j: (0, j)),
+            pl.BlockSpec((D, bf), lambda j: (0, j)),
+            pl.BlockSpec((bf, D), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, D), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, D), jnp.float32),
+            pltpu.VMEM((B, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, attn_out, w_o, norm_scale, w_gate, w_up, w_down)

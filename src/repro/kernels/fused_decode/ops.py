@@ -12,14 +12,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fused_decode.kernel import qkv_rope, ffn_swiglu
+from repro.kernels.fused_decode.kernel import (qkv_rope, qkv_rope_paged,
+                                               ffn_swiglu, oproj_ffn_swiglu)
 from repro.kernels.flash_attention.ops import decode as flash_decode_op
-
-
-def _interp(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.runtime import resolve_interpret as _interp
 
 
 @partial(jax.jit, static_argnames=("n_q", "n_kv", "dh", "theta", "interpret"),

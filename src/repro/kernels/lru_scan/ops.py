@@ -4,12 +4,7 @@ from functools import partial
 import jax
 
 from repro.kernels.lru_scan.kernel import lru_scan as _lru_scan
-
-
-def _interp(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.runtime import resolve_interpret as _interp
 
 
 @partial(jax.jit, static_argnames=("block_s", "block_d", "interpret"))

@@ -12,12 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels.monarch_fft.kernel import monarch_fused, monarch_conv_fused
 from repro.kernels.monarch_fft import ref
-
-
-def _interp(interpret):
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+from repro.kernels.runtime import resolve_interpret as _interp
 
 
 @partial(jax.jit, static_argnames=("block_n1", "interpret"))

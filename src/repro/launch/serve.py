@@ -94,6 +94,7 @@ def _serve_single(args, cfg):
                            max_len=args.prompt_len + args.new_tokens,
                            n_slots=args.n_slots, block_size=8,
                            scheduler=args.scheduler,
+                           backend=args.backend,
                            registry=get_registry())
     reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
@@ -132,6 +133,7 @@ def _serve_node(args, cfg):
                    n_slots=max(1, args.n_slots // n_groups), block_size=8,
                    max_len=args.prompt_len + args.new_tokens,
                    scheduler=args.scheduler,
+                   backend=args.backend,
                    registry=get_registry())
     for name, host, domain in hosts:
         node.register_expert(name, host, domain=domain)
@@ -172,6 +174,11 @@ def main(argv=None):
                     help="decode slots (split across groups in node mode)")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "run_to_completion"])
+    ap.add_argument("--backend", default="xla", choices=["xla", "fused"],
+                    help="decode-step backend (serving/backends.py): 'xla' "
+                    "is the reference paged extend, 'fused' runs each layer "
+                    "as paged-native Pallas kernels (prologue / paged "
+                    "flash-decode / epilogue)")
     ap.add_argument("--tagged-fraction", type=float, default=0.25,
                     help="fraction of requests submitted caller-tagged; "
                     "the rest are routed by the composition's router")

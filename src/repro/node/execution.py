@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.distributed import partitioning as part
 from repro.distributed.ctx import shard_map
+from repro.obs import trace
 from repro.serving.engine import PagedDecodeRunner, ServingEngine
 
 
@@ -149,6 +150,80 @@ def _tp_paged_extend(cfg: ModelConfig, tp: int, kv_sharded: bool,
     return logits, pk, pv                  # logits vocab-local when sharded
 
 
+def _tp_fused_paged_extend(cfg: ModelConfig, tp: int, vocab_sharded: bool,
+                           params, pk, pv, tables, lengths, active, tokens,
+                           scratch_row: int, interpret=None):
+    """Fused-backend per-device body for the single-token TP extend step.
+
+    Requires a kv-sharded pool (``Hkv % tp == 0``): then each device's local
+    q heads map contiguously onto its local kv heads with the global GQA
+    group size, so the Pallas prologue + paged flash-decode run unchanged on
+    local head counts. Only the two Megatron reductions (attention out-proj,
+    FFN down-proj) and the K/V scatter stay in XLA — the FFN runs the fused
+    SwiGLU kernel in residual-free form so its partial output can be psum'd
+    before the residual add.
+    """
+    from repro.kernels.flash_attention.ops import decode_paged
+    from repro.kernels.fused_decode.kernel import ffn_swiglu, qkv_rope_paged
+    from repro.kernels.runtime import resolve_interpret
+    from repro.models import layers as L
+
+    B, g = tokens.shape
+    assert g == 1
+    block = pk.shape[2]
+    maxb = tables.shape[1]
+    it = resolve_interpret(interpret)
+    didx = jax.lax.axis_index("model")
+
+    tok_tab = params["embed"]["tok"]
+    if vocab_sharded:
+        # bit-exact psum-select (see _tp_paged_extend)
+        Vl = tok_tab.shape[0]
+        loc = tokens - didx.astype(jnp.int32) * Vl
+        ok = (loc >= 0) & (loc < Vl)
+        h = jnp.where(ok[..., None],
+                      tok_tab[jnp.clip(loc, 0, Vl - 1)],
+                      jnp.zeros((), tok_tab.dtype))
+        h = jax.lax.psum(h, "model")
+    else:
+        h = tok_tab[tokens]
+    h = h[:, 0]                                                   # (B, D)
+
+    pos = lengths
+    blk_idx = jnp.minimum(pos // block, maxb - 1)
+    rows = jnp.take_along_axis(tables, blk_idx[:, None], axis=1)[:, 0]
+    rows = jnp.where(active, rows, jnp.int32(scratch_row))
+    off = pos % block
+    len1 = lengths + 1
+
+    def body(hh, xs):
+        lp, kp, vp = xs                    # kp (rows, block, Hkv_l, dh)
+        p = lp["attn"]
+        q, k, v = qkv_rope_paged(hh, p["norm"]["scale"], p["wq"], p["wk"],
+                                 p["wv"], pos, theta=cfg.rope_theta,
+                                 interpret=it)
+        kp = kp.at[rows, off].set(k.astype(kp.dtype))
+        vp = vp.at[rows, off].set(v.astype(vp.dtype))
+        o = decode_paged(q, kp, vp, tables, len1, interpret=it)   # (B,Hq_l,dh)
+        y = jnp.einsum("bhk,hkd->bd", o.astype(hh.dtype), p["wo"])  # partial
+        hh = hh + jax.lax.psum(y, "model")                        # reduce #1
+        mp = lp["mlp"]
+        y = ffn_swiglu(hh, lp["mlp_norm"]["scale"], mp["wi_gate"],
+                       mp["wi_up"], mp["wo"], residual=False,
+                       block_f=math.gcd(mp["wi_gate"].shape[1], 512),
+                       interpret=it)                              # partial
+        hh = hh + jax.lax.psum(y, "model")                        # reduce #2
+        return hh, (kp, vp)
+
+    h, (pk, pv) = jax.lax.scan(body, h, (params["layers"], pk, pv))
+    h = L.apply_norm(cfg, params["final_norm"], h)[:, None]       # (B,1,D)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, tok_tab)
+    else:
+        logits = h @ params["lm_head"]
+    return logits, pk, pv                  # logits vocab-local when sharded
+
+
 class TPPagedDecodeRunner(PagedDecodeRunner):
     """Paged prefill/extend for one socket group's mesh.
 
@@ -158,8 +233,9 @@ class TPPagedDecodeRunner(PagedDecodeRunner):
     encodes — the in_specs are read off the pspec tree, never re-derived).
     """
 
-    def __init__(self, cfg: ModelConfig, scratch_row: int, mesh: Mesh):
-        super().__init__(cfg, scratch_row)
+    def __init__(self, cfg: ModelConfig, scratch_row: int, mesh: Mesh,
+                 backend: str = "xla"):
+        super().__init__(cfg, scratch_row, backend=backend)
         if "model" not in mesh.axis_names:
             raise ValueError("socket-group mesh must carry a 'model' axis")
         from repro.models import get_model
@@ -185,11 +261,30 @@ class TPPagedDecodeRunner(PagedDecodeRunner):
         self.kv_sharded = attn["wk"][2] == "model"
         self.vocab_sharded = (
             self.param_pspecs["embed"]["tok"][0] == "model")
+        if self.backend.name == "fused" and not self.kv_sharded:
+            raise ValueError(
+                "backend='fused' TP extend needs a kv-sharded pool "
+                f"(n_kv_heads={cfg.n_kv_heads} does not shard over "
+                f"tp={self.tp}) — use backend='xla' for this group shape")
 
     def place_params(self, host_tree):
         """Host pytree -> TP-sharded device pytree on the group mesh (what
         the group's ``HBMWeightCache`` uses as its ``sharding=``)."""
         return jax.device_put(host_tree, self.param_shardings)
+
+    def _tp_body(self, g: int):
+        """Per-device extend body for one group size: the fused Pallas body
+        for single-token steps on the fused backend, else the XLA body
+        (multi-token verify steps always take the XLA body, mirroring the
+        single-device ``FusedPagedBackend`` dispatch)."""
+        cfg, scratch = self.cfg, self.scratch_row
+        tp, kvs, vs = self.tp, self.kv_sharded, self.vocab_sharded
+        if self.backend.name == "fused" and g == 1:
+            it = self.backend.interpret
+            return lambda p, k, v, tb, ln, ac, tk: _tp_fused_paged_extend(
+                cfg, tp, vs, p, k, v, tb, ln, ac, tk, scratch, interpret=it)
+        return lambda p, k, v, tb, ln, ac, tk: _tp_paged_extend(
+            cfg, tp, kvs, vs, p, k, v, tb, ln, ac, tk, scratch)
 
     def extend(self, params, pk, pv, tables, lengths, active, tokens):
         if self.tp == 1:
@@ -197,21 +292,26 @@ class TPPagedDecodeRunner(PagedDecodeRunner):
                                   tokens)
         key = tokens.shape
         if key not in self._extend:
-            cfg, scratch = self.cfg, self.scratch_row
-            tp, kvs, vs = self.tp, self.kv_sharded, self.vocab_sharded
-            logits_spec = P(None, None, "model") if vs else P()
+            logits_spec = P(None, None, "model") if self.vocab_sharded else P()
             mapped = shard_map(
-                lambda p, k, v, tb, ln, ac, tk: _tp_paged_extend(
-                    cfg, tp, kvs, vs, p, k, v, tb, ln, ac, tk, scratch),
+                self._tp_body(key[1]),
                 mesh=self.mesh,
                 in_specs=(self.param_pspecs, self.pool_pspec, self.pool_pspec,
                           P(), P(), P(), P()),
                 out_specs=(logits_spec, self.pool_pspec, self.pool_pspec),
                 check_vma=False)
             self._extend[key] = jax.jit(mapped, donate_argnums=(1, 2))
-        return self._extend[key](params, pk, pv,
-                                 jnp.asarray(tables), jnp.asarray(lengths),
-                                 jnp.asarray(active), jnp.asarray(tokens))
+        args = (params, pk, pv, jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(active), jnp.asarray(tokens))
+        if key not in self._abstract:
+            self._abstract[key] = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                               jnp.asarray(x).dtype), args)
+        self._last_key = key
+        with trace.span("decode_kernel", cat="kernel",
+                        backend=self.backend.name, tp=self.tp,
+                        batch=key[0], g=key[1]):
+            return self._extend[key](*args)
 
 
 def make_group_engine(coe, cfg: ModelConfig, mesh: Mesh,
@@ -221,7 +321,8 @@ def make_group_engine(coe, cfg: ModelConfig, mesh: Mesh,
     group's devices (per-socket KV shards)."""
     eng = ServingEngine(
         coe, cfg,
-        runner_factory=lambda c, s: TPPagedDecodeRunner(c, s, mesh),
+        runner_factory=lambda c, s, **kw: TPPagedDecodeRunner(c, s, mesh,
+                                                              **kw),
         **engine_kwargs)
     sh = NamedSharding(mesh, eng.runner.pool_pspec)
     eng.pool.k = jax.device_put(eng.pool.k, sh)

@@ -4,15 +4,23 @@
 slots are block tables in ``PagedKVCache`` (kvcache.py); decode policy is
 pluggable (``GreedyDecode`` / ``SpeculativeDecode``). ``SpeculativeDecoder``
 (speculative.py) is the standalone dense-cache reference implementation of
-draft-verify decoding that the engine policy is tested against.
+draft-verify decoding that the engine policy is tested against. The decode
+step itself is a pluggable backend (backends.py): ``XlaPagedBackend`` is the
+pure-XLA reference, ``FusedPagedBackend`` runs each layer as paged-native
+Pallas kernels; select via ``make_runner(cfg, scratch_row, backend=...)`` or
+``ServingEngine(backend=...)``.
 """
+from repro.serving.backends import (PagedBackend, XlaPagedBackend,
+                                    FusedPagedBackend, make_backend,
+                                    make_runner, PagedDecodeRunner)
 from repro.serving.engine import (ServingEngine, Request, ServeStats,
-                                  PagedDecodeRunner, GreedyDecode,
-                                  SpeculativeDecode)
+                                  GreedyDecode, SpeculativeDecode)
 from repro.serving.speculative import SpeculativeDecoder, SpecStats, extend_step
 from repro.serving.kvcache import PagedKVCache, PagedStats
 
 __all__ = ["ServingEngine", "Request", "ServeStats", "PagedDecodeRunner",
+           "PagedBackend", "XlaPagedBackend", "FusedPagedBackend",
+           "make_backend", "make_runner",
            "GreedyDecode", "SpeculativeDecode",
            "SpeculativeDecoder", "SpecStats", "extend_step",
            "PagedKVCache", "PagedStats"]

@@ -31,7 +31,6 @@ the baseline of ``benchmarks/run.py --sweep-arrival``.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -110,120 +109,55 @@ class ServeStats(StatsView):
 
 
 # ----------------------------------------------------------------------
-# Paged model execution (compiled once per (n_slots, g) shape)
+# Paged model execution (compiled once per (n_slots, g) shape).
+# The step bodies and the runner live in serving/backends.py behind the
+# backend seam; the names are re-exported here for compatibility.
 # ----------------------------------------------------------------------
 
-def _paged_extend(cfg: ModelConfig, params, pk, pv, tables, lengths, active,
-                  tokens, scratch_row: int):
-    """g-token extend step against the paged pool.
-
-    pk/pv   (L, rows, block, Hkv, dh) pool arrays (rows includes scratch)
-    tables  (B, maxb) int32 per-slot block tables (padded with scratch)
-    lengths (B,) int32 tokens already cached per slot
-    active  (B,) bool — lanes actually decoding this round; inactive lanes
-            scatter their (garbage) K/V to the scratch block and their
-            logits are ignored by the caller
-    tokens  (B, g) int32 inputs at positions lengths..lengths+g-1
-    Returns (logits (B,g,V), pk, pv).
-    """
-    from repro.models import layers as L
-    from repro.models import transformer as T
-
-    B, g = tokens.shape
-    block = pk.shape[2]
-    maxb = tables.shape[1]
-    S = maxb * block
-    h = T.embed_tokens(cfg, params, tokens)                       # (B,g,D)
-    positions = lengths[:, None] + jnp.arange(g, dtype=jnp.int32)[None]
-    blk_idx = jnp.minimum(positions // block, maxb - 1)
-    rows = jnp.take_along_axis(tables, blk_idx, axis=1)           # (B,g)
-    rows = jnp.where(active[:, None], rows, jnp.int32(scratch_row))
-    off = positions % block
-    kpos = jnp.arange(S, dtype=jnp.int32)
-    mask = kpos[None, None, :] <= positions[:, :, None]           # (B,g,S)
-    moe = cfg.n_experts > 0
-    Hq, dh = cfg.n_heads, cfg.head_dim
-
-    def body(hh, xs):
-        lp, kp, vp = xs                    # kp (rows, block, Hkv, dh)
-        p = lp["attn"]
-        hn = L.apply_norm(cfg, p["norm"], hh)
-        q = jnp.einsum("bsd,dhk->bshk", hn, p["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", hn, p["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", hn, p["wv"])
-        if cfg.qkv_bias:
-            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
-        q = L.apply_rope(cfg, q, positions)
-        k = L.apply_rope(cfg, k, positions)
-        kp = kp.at[rows, off].set(k.astype(kp.dtype))
-        vp = vp.at[rows, off].set(v.astype(vp.dtype))
-        kc = kp[tables].reshape(B, S, *kp.shape[2:])              # (B,S,Hkv,dh)
-        vc = vp[tables].reshape(B, S, *vp.shape[2:])
-        Hkv = kc.shape[2]
-        qg = q.reshape(B, g, Hkv, Hq // Hkv, dh)
-        s = jnp.einsum("bqhgd,bshd->bhgqs", qg, kc,
-                       preferred_element_type=jnp.float32) / math.sqrt(dh)
-        s = jnp.where(mask[:, None, None], s, -jnp.inf)
-        pa = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhgqs,bshd->bqhgd", pa.astype(vc.dtype), vc,
-                       preferred_element_type=jnp.float32)
-        o = o.reshape(B, g, Hq, dh).astype(hh.dtype)
-        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
-        if cfg.attn_out_bias:
-            y = y + p["bo"]
-        hh = hh + y
-        hh = T._mlp(cfg, lp["mlp_norm"], lp["mlp"], hh, moe)
-        return hh, (kp, vp)
-
-    h, (pk, pv) = jax.lax.scan(body, h, (params["layers"], pk, pv))
-    h = L.apply_norm(cfg, params["final_norm"], h)
-    logits = T.unembed(cfg, params, h)
-    return logits, pk, pv
+from repro.serving.backends import (PagedDecodeRunner, make_runner,  # noqa: E402
+                                    xla_paged_extend as _paged_extend)
 
 
-class PagedDecodeRunner:
-    """jit-compiled paged prefill / extend for one backbone config.
+class _DeviceTableCache:
+    """Cached device uploads of the per-slot block tables / lengths.
 
-    All experts of a Samba-CoE share the backbone (paper §II), so one runner
-    — one compiled extend per (n_slots, g) — serves every expert. Shareable
-    across engines to reuse the compile cache (the benchmark sweep does).
-    """
+    The decode loop used to rebuild and re-upload ``tables``/``lengths``
+    host arrays every round even when no slot changed. The pool versions
+    its host bookkeeping (``table_version``/``length_version``), so the
+    device copies are rebuilt only when the backing state moved or the
+    slot->request mapping changed. Steady-state greedy rounds re-upload
+    only lengths; the speculative draft loop (gamma extends against
+    unchanged tables, lengths offset device-side) hits the cache for both.
+    Cached arrays are never donated by the extend step (only the pool
+    arrays are), so reuse across rounds is safe."""
 
-    def __init__(self, cfg: ModelConfig, scratch_row: int):
-        if cfg.family not in ("dense", "moe"):
-            raise ValueError("paged serving supports dense/moe families only")
-        if cfg.sliding_window:
-            raise ValueError("paged serving does not support sliding windows")
-        if cfg.first_dense_layers:
-            raise ValueError("paged serving: first_dense_layers unsupported")
-        self.cfg = cfg
-        self.scratch_row = scratch_row
-        self._prefill = {}                 # S -> jitted forward
-        self._extend = {}                  # (B, g) -> jitted extend
+    def __init__(self, pool: PagedKVCache, max_blocks: int,
+                 empty_table: np.ndarray):
+        self.pool = pool
+        self.max_blocks = max_blocks
+        self._empty = empty_table
+        self._tab_key = None
+        self._len_key = None
+        self._tables = None
+        self._lengths = None
 
-    def prefill_kv(self, params, tokens):
-        """tokens (1,S) -> (last logits (V,), k, v each (L,S,Hkv,dh))."""
-        from repro.models import transformer as T
-        S = tokens.shape[1]
-        if S not in self._prefill:
-            cfg = self.cfg
-            self._prefill[S] = jax.jit(lambda p, t: T.forward(
-                cfg, p, {"tokens": t}, return_cache=True, last_only=True))
-        logits, caches = self._prefill[S](params, tokens)
-        k, v = caches[-1]
-        return logits[:, -1][0], k[:, 0], v[:, 0]
+    def tables(self, rids: Tuple[Optional[int], ...]):
+        key = (self.pool.table_version, rids)
+        if key != self._tab_key:
+            self._tables = jnp.asarray(np.stack([
+                self.pool.padded_table(r, self.max_blocks)
+                if r is not None else self._empty for r in rids]))
+            self._tab_key = key
+        return self._tables
 
-    def extend(self, params, pk, pv, tables, lengths, active, tokens):
-        key = tokens.shape
-        if key not in self._extend:
-            cfg, scratch = self.cfg, self.scratch_row
-            self._extend[key] = jax.jit(
-                lambda p, pk, pv, tb, ln, ac, tk: _paged_extend(
-                    cfg, p, pk, pv, tb, ln, ac, tk, scratch),
-                donate_argnums=(1, 2))
-        return self._extend[key](params, pk, pv,
-                                 jnp.asarray(tables), jnp.asarray(lengths),
-                                 jnp.asarray(active), jnp.asarray(tokens))
+    def lengths(self, rids: Tuple[Optional[int], ...]):
+        key = (self.pool.length_version, rids)
+        if key != self._len_key:
+            self._lengths = jnp.asarray(np.array(
+                [self.pool.length(r) if r is not None else 0 for r in rids],
+                np.int32))
+            self._len_key = key
+        return self._lengths
 
 
 # ----------------------------------------------------------------------
@@ -253,7 +187,8 @@ class GreedyDecode:
             toks[i, 0] = eng.slots[i].last_token
         tables, lengths = eng._device_tables()
         logits, pk, pv = eng.runner.extend(params, eng.pool.k, eng.pool.v,
-                                           tables, lengths, active, toks)
+                                           tables, lengths,
+                                           eng._device_active(active), toks)
         eng.pool.k, eng.pool.v = pk, pv
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         return {int(i): [int(nxt[i])] for i in np.nonzero(active)[0]}
@@ -297,8 +232,13 @@ class SpeculativeDecode:
             engine.pool.n_blocks, engine.block,
             self.draft_cfg.n_layers, self.draft_cfg.n_kv_heads,
             self.draft_cfg.head_dim, dtype=engine.pool.k.dtype, scratch=True)
-        self.d_runner = PagedDecodeRunner(self.draft_cfg,
-                                          self.d_pool.scratch_index)
+        # the draft inherits the engine's backend, so a fused deployment
+        # runs its single-token draft loop — the speculative hot path —
+        # through the same Pallas kernels as the target
+        self.d_runner = make_runner(self.draft_cfg, self.d_pool.scratch_index,
+                                    backend=engine.runner.backend_name)
+        self._d_dev = _DeviceTableCache(self.d_pool, engine.max_blocks,
+                                        engine._empty_table)
 
     def on_admit(self, slot_idx: int, req: Request, params):
         # draft prefills the same prompt into its own pool
@@ -321,10 +261,9 @@ class SpeculativeDecode:
             cur[i, 0] = eng.slots[i].last_token
 
         tables, lengths = eng._device_tables()
-        d_tables = np.stack([
-            self.d_pool.padded_table(eng.slots[i].req.rid, eng.max_blocks)
-            if eng.slots[i] is not None else eng._empty_table
-            for i in range(B)])
+        dact = eng._device_active(active)
+        rids = eng._slot_rids()
+        d_tables = self._d_dev.tables(rids)
 
         # --- draft proposes gamma tokens autoregressively
         props = np.zeros((B, g), np.int32)
@@ -332,7 +271,7 @@ class SpeculativeDecode:
         for t in range(g):
             lg, dk, dv = self.d_runner.extend(
                 self.d_params, self.d_pool.k, self.d_pool.v,
-                d_tables, lengths + t, active, d_in)
+                d_tables, lengths + t, dact, d_in)
             self.d_pool.k, self.d_pool.v = dk, dv
             d_in = np.asarray(jnp.argmax(lg[:, -1], -1), np.int32)[:, None]
             props[:, t] = d_in[:, 0]
@@ -341,7 +280,7 @@ class SpeculativeDecode:
         # --- target verifies all gamma in one paged extend
         prop_inputs = np.concatenate([cur, props[:, :-1]], axis=1)   # (B,g)
         t_lg, pk, pv = eng.runner.extend(params, eng.pool.k, eng.pool.v,
-                                         tables, lengths, active, prop_inputs)
+                                         tables, lengths, dact, prop_inputs)
         eng.pool.k, eng.pool.v = pk, pv
         self.stats.target_calls += 1
         t_next = np.asarray(jnp.argmax(t_lg, -1), np.int32)          # (B,g)
@@ -380,6 +319,7 @@ class ServingEngine:
                  switch_quantum: int = 8, starvation_limit: int = 16,
                  runner: Optional[PagedDecodeRunner] = None,
                  runner_factory=None,
+                 backend: Optional[str] = None,
                  kv_dtype=jnp.bfloat16,
                  registry: Optional[MetricsRegistry] = None,
                  obs_labels: Optional[Dict[str, Any]] = None):
@@ -417,14 +357,31 @@ class ServingEngine:
                                     self.pool.scratch_index, np.int32)
         # runner_factory lets a caller supply a runner that needs the pool's
         # scratch row without duplicating the pool-sizing logic above (the
-        # node subsystem injects its tensor-parallel runner this way)
-        self.runner = runner or (runner_factory or PagedDecodeRunner)(
-            cfg, self.pool.scratch_index)
+        # node subsystem injects its tensor-parallel runner this way);
+        # backend selects the decode-step implementation ('xla'/'fused',
+        # see serving/backends.py) and is forwarded to the factory
+        if runner is None:
+            factory = runner_factory or PagedDecodeRunner
+            kw = {} if backend is None else {"backend": backend}
+            self.runner = factory(cfg, self.pool.scratch_index, **kw)
+        else:
+            if backend is not None and runner.backend_name != backend:
+                raise ValueError(
+                    f"shared runner executes backend "
+                    f"{runner.backend_name!r}, engine asked for {backend!r}")
+            self.runner = runner
         if self.runner.scratch_row != self.pool.scratch_index:
             raise ValueError(
                 "shared runner was compiled for a different pool size "
                 f"(scratch row {self.runner.scratch_row} != "
                 f"{self.pool.scratch_index})")
+        self._dev_tables = _DeviceTableCache(self.pool, self.max_blocks,
+                                             self._empty_table)
+        self._active_cache: Optional[Tuple[np.ndarray, jnp.ndarray]] = None
+        # info-style gauge: which decode backend this engine executes
+        self._registry.gauge("serve.backend", labels={
+            **self._obs_labels,
+            "backend": self.runner.backend_name}).set(1.0)
         self.policy.bind(self)
 
         self.queue: List[Request] = []
@@ -672,14 +629,24 @@ class ServingEngine:
         if need + active_bytes <= self.coe.cache.capacity:
             self.coe.cache.prefetch(name)
 
-    def _device_tables(self) -> Tuple[np.ndarray, np.ndarray]:
-        tables = np.stack([
-            self.pool.padded_table(s.req.rid, self.max_blocks)
-            if s is not None else self._empty_table
-            for s in self.slots])
-        lengths = np.array([self.pool.length(s.req.rid) if s is not None
-                            else 0 for s in self.slots], np.int32)
-        return tables, lengths
+    def _slot_rids(self) -> Tuple[Optional[int], ...]:
+        return tuple(s.req.rid if s is not None else None
+                     for s in self.slots)
+
+    def _device_tables(self):
+        """Device copies of the per-slot block tables and lengths, re-uploaded
+        only when the pool bookkeeping or slot mapping changed (see
+        ``_DeviceTableCache``)."""
+        rids = self._slot_rids()
+        return self._dev_tables.tables(rids), self._dev_tables.lengths(rids)
+
+    def _device_active(self, active: np.ndarray):
+        """Device copy of the active mask, reused while the mask is stable
+        (steady-state decode keeps the same lanes active for many rounds)."""
+        if (self._active_cache is None
+                or not np.array_equal(self._active_cache[0], active)):
+            self._active_cache = (active.copy(), jnp.asarray(active))
+        return self._active_cache[1]
 
     def _decode_round(self, active: np.ndarray, done: List[Request]):
         t0 = time.perf_counter()

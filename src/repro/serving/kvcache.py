@@ -66,6 +66,11 @@ class PagedKVCache:
         self._free: List[int] = list(range(n_blocks))[::-1]
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
+        # monotonic versions of the host bookkeeping, so device-copy caches
+        # (engine._DeviceTableCache) can skip re-uploading unchanged
+        # tables/lengths every decode round
+        self.table_version = 0        # bumped when any block table changes
+        self.length_version = 0       # bumped when any length changes
         self.stats = PagedStats(registry=registry, labels=labels)
 
     # -- sizing ------------------------------------------------------------
@@ -131,6 +136,8 @@ class PagedKVCache:
             raise KeyError(f"request {rid} already open")
         self._tables[rid] = []
         self._lengths[rid] = 0
+        self.table_version += 1
+        self.length_version += 1
 
     def _ensure(self, rid: int, n_tokens: int):
         need_blocks = -(-(self._lengths[rid] + n_tokens) // self.block)
@@ -138,6 +145,7 @@ class PagedKVCache:
             if not self._free:
                 raise MemoryError("KV pool exhausted")
             self._tables[rid].append(self._free.pop())
+            self.table_version += 1
             self.stats.allocs += 1
             self.stats.blocks_in_use += 1
             self.stats.peak_blocks = max(self.stats.peak_blocks,
@@ -156,6 +164,7 @@ class PagedKVCache:
             raise RuntimeError(
                 f"advance({rid}, {n_tokens}) beyond reserved blocks")
         self._lengths[rid] += n_tokens
+        self.length_version += 1
 
     def append(self, rid: int, k_new, v_new):
         """k_new/v_new (L, n_tokens, kv_heads, head_dim) for one request."""
@@ -168,6 +177,7 @@ class PagedKVCache:
         self.k = self.k.at[:, blks, offs].set(k_new.astype(self.k.dtype))
         self.v = self.v.at[:, blks, offs].set(v_new.astype(self.v.dtype))
         self._lengths[rid] = start + n
+        self.length_version += 1
 
     def gather(self, rid: int):
         """Contiguous (L, len, kv_heads, head_dim) view for attention."""
@@ -183,3 +193,5 @@ class PagedKVCache:
             self.stats.frees += 1
             self.stats.blocks_in_use -= 1
         del self._lengths[rid]
+        self.table_version += 1
+        self.length_version += 1
