@@ -95,6 +95,7 @@ def _serve_single(args, cfg):
                            n_slots=args.n_slots, block_size=8,
                            scheduler=args.scheduler,
                            backend=args.backend,
+                           prefill_mode=args.prefill_mode,
                            registry=get_registry())
     reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
@@ -134,6 +135,8 @@ def _serve_node(args, cfg):
                    max_len=args.prompt_len + args.new_tokens,
                    scheduler=args.scheduler,
                    backend=args.backend,
+                   prefill_mode=args.prefill_mode,
+                   prefill_groups=args.prefill_groups,
                    registry=get_registry())
     for name, host, domain in hosts:
         node.register_expert(name, host, domain=domain)
@@ -179,6 +182,16 @@ def main(argv=None):
                     "is the reference paged extend, 'fused' runs each layer "
                     "as paged-native Pallas kernels (prologue / paged "
                     "flash-decode / epilogue)")
+    ap.add_argument("--prefill-mode", default="packed",
+                    choices=["packed", "sequential"],
+                    help="'packed' admits pending requests through the "
+                    "bucketed AOT packed-prefill path (serving/prefill.py; "
+                    "zero recompiles after warmup); 'sequential' keeps the "
+                    "one-forward-per-prompt reference path")
+    ap.add_argument("--prefill-groups", type=int, default=0, metavar="N",
+                    help="with --node-shape: dedicate the first N socket "
+                    "groups to prefill (disaggregated serving) — their KV "
+                    "blocks are handed off to the decode groups")
     ap.add_argument("--tagged-fraction", type=float, default=0.25,
                     help="fraction of requests submitted caller-tagged; "
                     "the rest are routed by the composition's router")

@@ -32,6 +32,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -39,6 +40,7 @@ from repro.distributed import partitioning as part
 from repro.distributed.ctx import shard_map
 from repro.obs import trace
 from repro.serving.engine import PagedDecodeRunner, ServingEngine
+from repro.serving.prefill import record_compile
 
 
 def _tp_paged_extend(cfg: ModelConfig, tp: int, kv_sharded: bool,
@@ -292,6 +294,7 @@ class TPPagedDecodeRunner(PagedDecodeRunner):
                                   tokens)
         key = tokens.shape
         if key not in self._extend:
+            record_compile("tp_extend")
             logits_spec = P(None, None, "model") if self.vocab_sharded else P()
             mapped = shard_map(
                 self._tp_body(key[1]),
@@ -312,6 +315,146 @@ class TPPagedDecodeRunner(PagedDecodeRunner):
                         backend=self.backend.name, tp=self.tp,
                         batch=key[0], g=key[1]):
             return self._extend[key](*args)
+
+
+class PrefillWorker:
+    """A socket group dedicated to prefill (disaggregated serving).
+
+    Prefill is compute-bound, decode bandwidth-bound — colocating them makes
+    every admit a head-of-line stall for the decode batch. A node in
+    disaggregated mode (``RDUNode(prefill_groups=N)``) dedicates socket
+    groups to prefill: each worker owns its own ``CompositionOfExperts``
+    cache over the node's shared store, a ``PackedPrefillRunner`` (bucketed
+    AOT forwards, TP via GSPMD on the group mesh), and a small TP-sharded
+    paged pool that holds K/V only between the packed scatter and the
+    block handoff. ``step()`` packs the FIFO queue's same-expert requests
+    into one bucketed call, then gathers each request's blocks out of the
+    group cache and attaches them as a ``PrefillHandoff`` — the node
+    forwards the request to a decode group, whose engine adopts the blocks
+    into its own cache without re-running the forward.
+    """
+
+    def __init__(self, group, coe, cfg: ModelConfig, *,
+                 max_len: int = 4096, block_size: int = 16,
+                 n_pack: int = 8, buckets=None, kv_dtype=jnp.bfloat16,
+                 registry=None, labels=None):
+        from repro.obs.metrics import MetricsRegistry
+        from repro.serving.kvcache import PagedKVCache
+        from repro.serving.prefill import PackedPrefillRunner, default_buckets
+
+        self.group = group
+        self.coe = coe
+        self.cfg = cfg
+        self.block = block_size
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.labels = dict(labels or {})
+        buckets = tuple(buckets) if buckets else default_buckets(max_len)
+        self.runner = PackedPrefillRunner(cfg, buckets=buckets,
+                                          max_segments=n_pack)
+        # staging pool: one packed bucket in flight at a time, so the cap
+        # is the largest bucket's blocks + per-request rounding + scratch
+        n_blocks = -(-buckets[-1] // block_size) + n_pack
+        self.pool = PagedKVCache(n_blocks, block_size, cfg.n_layers,
+                                 cfg.n_kv_heads, cfg.head_dim, kv_dtype,
+                                 scratch=True, registry=self.registry,
+                                 labels=self.labels)
+        # TP placement mirrors make_group_engine: params shard over the
+        # group mesh via the partitioning rules, the staging pool over its
+        # kv-head dim; the packed forward is plain jit, GSPMD does the rest
+        from repro.models import get_model
+        specs = get_model(cfg).param_specs()
+        self.param_shardings = part.param_shardings(specs, mesh=group.mesh)
+        sh = NamedSharding(group.mesh, part.paged_pool_pspec(cfg, group.mesh))
+        self.pool.k = jax.device_put(self.pool.k, sh)
+        self.pool.v = jax.device_put(self.pool.v, sh)
+        coe.cache.sharding = self.param_shardings
+        self.queue = []
+        self.prefilled = 0
+        self._ttft_hist = self.registry.histogram("serve.ttft_s",
+                                                  labels=self.labels)
+        self._handoff_bytes = self.registry.counter("node.kv_handoff_bytes",
+                                                    labels=self.labels)
+        self._handoffs = self.registry.counter("node.kv_handoffs",
+                                               labels=self.labels)
+
+    @property
+    def load(self) -> int:
+        return len(self.queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue)
+
+    def submit(self, req):
+        if len(req.tokens) > self.runner.buckets[-1]:
+            raise ValueError(
+                f"request {req.rid}: {len(req.tokens)} prompt tokens exceed "
+                f"the prefill group's largest bucket "
+                f"{self.runner.buckets[-1]}")
+        self.queue.append(req)
+
+    def warmup(self, expert=None):
+        """AOT-compile every bucket forward + scatter against this group's
+        sharded params/pool."""
+        names = self.coe.expert_names()
+        if not names:
+            raise RuntimeError("prefill worker warmup: no experts registered")
+        params = self.coe.cache.activate(expert or names[0])
+        self.runner.warmup(params, self.pool)
+
+    def step(self):
+        """Prefill one packed batch: the queue head's expert, same-expert
+        requests packed FIFO until the largest bucket (or ``n_pack``) fills.
+        Returns the completed requests, each carrying a ``PrefillHandoff``.
+        """
+        import time
+
+        from repro.serving.prefill import PrefillHandoff
+
+        if not self.queue:
+            return []
+        expert = self.queue[0].expert
+        cap = self.runner.buckets[-1]
+        picked, rest, total = [], [], 0
+        for r in self.queue:
+            n = len(r.tokens)
+            if (r.expert == expert and len(picked) < self.runner.max_segments
+                    and total + n <= cap):
+                picked.append(r)
+                total += n
+            else:
+                rest.append(r)
+        self.queue = rest
+        params = self.coe.cache.activate(expert)
+        with trace.span("prefill", cat="node", group=self.group.gid,
+                        expert=expert, prompt_tokens=total,
+                        **{"prefill.packed": len(picked)}) as sp:
+            res = self.runner(params, [r.tokens for r in picked])
+            sp.add(**{"prefill.bucket": res.bucket})
+            firsts = np.asarray(
+                jnp.argmax(res.logits[:len(picked)], axis=-1), np.int32)
+            self.runner.scatter_into(self.pool, res,
+                                     [r.rid for r in picked])
+        out = []
+        for i, r in enumerate(picked):
+            with trace.span("kv_handoff", cat="node", group=self.group.gid,
+                            request_id=r.rid):
+                k, v = self.pool.gather(r.rid)
+                # the handoff crosses the inter-socket fabric: materialize
+                # on host, then release the staging blocks
+                hk, hv = np.asarray(k), np.asarray(v)
+                self.pool.free(r.rid)
+            r.handoff = PrefillHandoff(first_token=int(firsts[i]),
+                                       k=hk, v=hv)
+            now = time.perf_counter()
+            r.prefill_done_s = now
+            r.first_token_s = now
+            self._ttft_hist.observe(now - r.arrival_s)
+            self._handoff_bytes.inc(hk.nbytes + hv.nbytes)
+            self._handoffs.inc()
+            self.prefilled += 1
+            out.append(r)
+        return out
 
 
 def make_group_engine(coe, cfg: ModelConfig, mesh: Mesh,

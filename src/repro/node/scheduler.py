@@ -24,10 +24,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
+import jax.numpy as jnp
+
 from repro.configs.base import ModelConfig
 from repro.core.coe import CompositionOfExperts, ExpertHandle
 from repro.core.memory_tiers import MachineTiers, TPU_V5E_NODE
-from repro.node.execution import make_group_engine
+from repro.node.execution import PrefillWorker, make_group_engine
 from repro.node.placement import (ExpertProfile, Placement,
                                   plan_expert_placement)
 from repro.node.topology import NodeTopology, SocketGroup
@@ -69,9 +71,12 @@ class NodeStats(StatsView):
     starvation_overrides = counter_field()
 
     def __init__(self, registry=None, labels=None,
-                 per_group: Optional[List[Dict[str, Any]]] = None, **values):
+                 per_group: Optional[List[Dict[str, Any]]] = None,
+                 prefill_groups: Optional[List[Dict[str, Any]]] = None,
+                 **values):
         super().__init__(registry, labels, **values)
         self.per_group = list(per_group or [])
+        self.prefill_groups = list(prefill_groups or [])
 
     @property
     def imbalance(self) -> float:
@@ -88,6 +93,8 @@ class NodeStats(StatsView):
     def as_dict(self) -> Dict[str, Any]:
         d = super().as_dict()
         d["per_group"] = self.per_group
+        if self.prefill_groups:
+            d["prefill_groups"] = self.prefill_groups
         return d
 
 
@@ -101,13 +108,27 @@ class RDUNode:
                  machine: MachineTiers = TPU_V5E_NODE,
                  avg_tokens: int = 16, replicate_share: float = 0.5,
                  registry: Optional[MetricsRegistry] = None,
+                 prefill_groups: int = 0, prefill_pack: Optional[int] = None,
                  **engine_kwargs):
         """``group_hbm_bytes`` is one socket group's pooled HBM tier (its
         ``tp`` sockets' HBM behaves as one software-managed cache, the way
         the paper's compiler treats a TP domain); ``group_kv_reserve_bytes``
         carves each group's paged KV pool out of it. ``engine_kwargs`` pass
         through to every group's ``ServingEngine`` (n_slots, block_size,
-        max_len, ...)."""
+        max_len, ...).
+
+        ``prefill_groups=N`` enables DISAGGREGATED mode: the first N
+        topology groups become dedicated ``PrefillWorker``s (compute-bound
+        phase) and only the remaining groups run decode engines
+        (bandwidth-bound phase). Requests are prefilled on a worker, then
+        their KV blocks are handed off to a decode group's cache
+        (``Request.handoff``) — decode engines never run a prefill forward.
+        ``prefill_pack`` caps prompts per packed prefill call (default: the
+        engines' ``n_slots``)."""
+        if not 0 <= prefill_groups < len(topology.groups):
+            raise ValueError(
+                f"prefill_groups={prefill_groups} must leave at least one "
+                f"decode group (topology has {len(topology.groups)})")
         self.topology = topology
         self.cfg = cfg
         self.router = router
@@ -120,8 +141,23 @@ class RDUNode:
         # lands here under a group=<gid> label, so the --metrics-port
         # endpoint and registry snapshots see the whole node at once
         self.registry = registry if registry is not None else MetricsRegistry()
+        self.workers: List[PrefillWorker] = []
+        for g in topology.groups[:prefill_groups]:
+            glabels = {"group": g.gid, "role": "prefill"}
+            coe = CompositionOfExperts(
+                router, router_params, group_hbm_bytes,
+                kv_reserve_bytes=group_kv_reserve_bytes, store=self.store,
+                registry=self.registry, obs_labels=glabels)
+            self.workers.append(PrefillWorker(
+                g, coe, cfg,
+                max_len=engine_kwargs.get("max_len", 4096),
+                block_size=engine_kwargs.get("block_size", 16),
+                n_pack=prefill_pack or engine_kwargs.get("n_slots", 8),
+                buckets=engine_kwargs.get("prefill_buckets"),
+                kv_dtype=engine_kwargs.get("kv_dtype", jnp.bfloat16),
+                registry=self.registry, labels=glabels))
         self.groups: List[GroupState] = []
-        for g in topology.groups:
+        for g in topology.groups[prefill_groups:]:
             glabels = {"group": g.gid}
             coe = CompositionOfExperts(
                 router, router_params, group_hbm_bytes,
@@ -139,10 +175,13 @@ class RDUNode:
     # -- registry ---------------------------------------------------------
     def register_expert(self, name: str, host_params, domain: str = "general"):
         """Register one expert node-wide: the first group's registration
-        persists the params into the shared store; every other group links
-        the store-resident copy (no extra DRAM)."""
-        for i, gs in enumerate(self.groups):
-            gs.coe.register(ExpertHandle(
+        persists the params into the shared store; every other group
+        (prefill workers included) links the store-resident copy (no extra
+        DRAM)."""
+        coes = ([w.coe for w in self.workers]
+                + [gs.coe for gs in self.groups])
+        for i, coe in enumerate(coes):
+            coe.register(ExpertHandle(
                 name, self.cfg, host_params if i == 0 else None,
                 domain=domain))
         self.placement = None              # registry changed: replan lazily
@@ -192,35 +231,56 @@ class RDUNode:
 
     # -- serving ----------------------------------------------------------
     def submit(self, req: Request) -> int:
-        """Route (if untagged), pick the least-loaded owning group, enqueue.
-        Returns the chosen group id."""
+        """Route (if untagged) and enqueue. Colocated mode: straight to the
+        least-loaded owning decode group. Disaggregated mode: to the
+        least-loaded prefill worker first — the request reaches a decode
+        group later, carrying its KV handoff. Returns the chosen group's
+        topology gid."""
         if self.placement is None:
             self.plan(dict(self.demand))
         with trace.span("dispatch", cat="node", request_id=req.rid) as sp:
             if req.expert is None:
-                req.expert, dt = self.groups[0].coe.route_request(req.tokens)
+                coe0 = (self.workers[0].coe if self.workers
+                        else self.groups[0].coe)
+                req.expert, dt = coe0.route_request(req.tokens)
                 self.route_s += dt
             elif req.expert not in self.groups[0].coe.experts:
                 raise KeyError(
                     f"request {req.rid}: unknown expert {req.expert!r}")
             self.demand[req.expert] = self.demand.get(req.expert, 0) + 1
-            owners = self.placement.owners(req.expert) or tuple(
-                range(len(self.groups)))
-            gid = min(owners, key=lambda g: self.groups[g].load)
-            sp.add(expert=req.expert, group=gid)
-            self.groups[gid].engine.submit(req)
-            self.groups[gid].submitted += 1
             self.requests_in += 1
+            if self.workers and req.handoff is None:
+                w = min(self.workers, key=lambda w: w.load)
+                sp.add(expert=req.expert, prefill_group=w.group.gid)
+                w.submit(req)
+                return w.group.gid
+            gid = self._dispatch_decode(req)
+            sp.add(expert=req.expert, group=gid)
         return gid
+
+    def _dispatch_decode(self, req: Request) -> int:
+        """Least-loaded owning decode group; returns its topology gid."""
+        owners = self.placement.owners(req.expert) or tuple(
+            range(len(self.groups)))
+        gi = min(owners, key=lambda g: self.groups[g].load)
+        self.groups[gi].engine.submit(req)
+        self.groups[gi].submitted += 1
+        return self.groups[gi].group.gid
 
     @property
     def has_work(self) -> bool:
-        return any(gs.engine.has_work for gs in self.groups)
+        return (any(w.has_work for w in self.workers)
+                or any(gs.engine.has_work for gs in self.groups))
 
     def step(self) -> List[Request]:
-        """One node iteration: step every group engine with work; returns
-        requests completed across the node."""
+        """One node iteration: run every prefill worker's packed batch and
+        hand the finished requests (KV attached) to decode groups, then
+        step every decode engine with work; returns requests completed
+        across the node."""
         done: List[Request] = []
+        for w in self.workers:
+            for req in w.step():
+                self._dispatch_decode(req)
         for gs in self.groups:
             if gs.engine.has_work:
                 done.extend(gs.engine.step())
@@ -236,15 +296,30 @@ class RDUNode:
                 raise RuntimeError("node drain: exceeded max_steps")
         return out
 
+    def warmup(self, expert: Optional[str] = None):
+        """AOT-compile every group's serving hot path (prefill buckets +
+        scatters + decode extend) before traffic arrives."""
+        for w in self.workers:
+            w.warmup(expert)
+        for gs in self.groups:
+            gs.engine.warmup(expert)
+
     # -- accounting -------------------------------------------------------
     def hbm_within_budget(self) -> bool:
-        """Every group's weight cache and KV pool inside its HBM shares."""
+        """Every group's weight cache and KV pool inside its HBM shares
+        (prefill workers' staging pools included)."""
         for gs in self.groups:
             cache, budget = gs.coe.cache, gs.coe.hbm_budget
             if cache.used_bytes > cache.capacity:
                 return False
             if budget.kv_bytes and (gs.engine.pool.capacity_bytes()
                                     > budget.kv_bytes):
+                return False
+        for w in self.workers:
+            cache, budget = w.coe.cache, w.coe.hbm_budget
+            if cache.used_bytes > cache.capacity:
+                return False
+            if budget.kv_bytes and w.pool.capacity_bytes() > budget.kv_bytes:
                 return False
         return True
 
@@ -265,6 +340,15 @@ class RDUNode:
                 "prefetch_hits": cs.prefetch_hits,
                 "hbm_used_bytes": gs.coe.cache.used_bytes,
             })
+        prefill_groups = []
+        for w in self.workers:
+            cs = w.coe.cache.stats
+            prefill_groups.append({
+                "gid": w.group.gid, "tp": w.group.tp,
+                "queued": len(w.queue), "prefilled": w.prefilled,
+                "cache_hits": cs.hits, "cache_misses": cs.misses,
+                "hbm_used_bytes": w.coe.cache.used_bytes,
+            })
         return NodeStats(
             registry=self.registry,
             requests=sum(g["requests"] for g in per_group),
@@ -273,8 +357,10 @@ class RDUNode:
             switch_stall_s=sum(g["switch_stall_s"] for g in per_group),
             starvation_overrides=sum(g["starvation_overrides"]
                                      for g in per_group),
-            per_group=per_group)
+            per_group=per_group, prefill_groups=prefill_groups)
 
     def close(self):
+        for w in self.workers:
+            w.coe.cache.close()
         for gs in self.groups:
             gs.coe.cache.close()

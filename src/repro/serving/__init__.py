@@ -8,13 +8,21 @@ draft-verify decoding that the engine policy is tested against. The decode
 step itself is a pluggable backend (backends.py): ``XlaPagedBackend`` is the
 pure-XLA reference, ``FusedPagedBackend`` runs each layer as paged-native
 Pallas kernels; select via ``make_runner(cfg, scratch_row, backend=...)`` or
-``ServingEngine(backend=...)``.
+``ServingEngine(backend=...)``. Prompt processing is bucketed packed prefill
+(prefill.py): ``PackedPrefillRunner`` AOT-compiles one forward per
+power-of-two length bucket at ``ServingEngine.warmup()`` and packs several
+prompts into each call via segment ids — after warmup a mixed-length burst
+triggers zero XLA compilations (``compile_count`` counts them).
 """
 from repro.serving.backends import (PagedBackend, XlaPagedBackend,
                                     FusedPagedBackend, make_backend,
                                     make_runner, PagedDecodeRunner)
 from repro.serving.engine import (ServingEngine, Request, ServeStats,
                                   GreedyDecode, SpeculativeDecode)
+from repro.serving.prefill import (PackedPrefillRunner, PrefillHandoff,
+                                   default_buckets, bucket_for, plan_packs,
+                                   compile_count, compile_counts,
+                                   record_compile, reset_compile_counts)
 from repro.serving.speculative import SpeculativeDecoder, SpecStats, extend_step
 from repro.serving.kvcache import PagedKVCache, PagedStats
 
@@ -22,5 +30,9 @@ __all__ = ["ServingEngine", "Request", "ServeStats", "PagedDecodeRunner",
            "PagedBackend", "XlaPagedBackend", "FusedPagedBackend",
            "make_backend", "make_runner",
            "GreedyDecode", "SpeculativeDecode",
+           "PackedPrefillRunner", "PrefillHandoff",
+           "default_buckets", "bucket_for", "plan_packs",
+           "compile_count", "compile_counts", "record_compile",
+           "reset_compile_counts",
            "SpeculativeDecoder", "SpecStats", "extend_step",
            "PagedKVCache", "PagedStats"]

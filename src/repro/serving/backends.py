@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.obs import trace
+from repro.serving.prefill import record_compile
 
 
 # ----------------------------------------------------------------------
@@ -321,6 +322,7 @@ class PagedDecodeRunner:
         from repro.models import transformer as T
         S = tokens.shape[1]
         if S not in self._prefill:
+            record_compile("prefill_kv")
             cfg = self.cfg
             self._prefill[S] = jax.jit(lambda p, t: T.forward(
                 cfg, p, {"tokens": t}, return_cache=True, last_only=True))
@@ -330,6 +332,7 @@ class PagedDecodeRunner:
 
     def _extend_jit(self, key):
         if key not in self._extend:
+            record_compile("extend")
             self._extend[key] = jax.jit(self.backend.extend_fn(*key),
                                         donate_argnums=(1, 2))
         return self._extend[key]

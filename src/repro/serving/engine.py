@@ -45,6 +45,8 @@ from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.stats import StatsView, counter_field
 from repro.serving.kvcache import PagedKVCache
+from repro.serving.prefill import (PackedPrefillRunner, PrefillHandoff,
+                                   default_buckets, plan_packs)
 from repro.serving.speculative import SpecStats
 
 
@@ -55,6 +57,9 @@ class Request:
     max_new_tokens: int
     arrival_s: float = field(default_factory=time.perf_counter)
     expert: Optional[str] = None        # routed at submit
+    # prefill state computed off-engine (disaggregated prefill group);
+    # admission adopts it into a slot instead of running a prefill
+    handoff: Optional["PrefillHandoff"] = None
     prefill_done_s: Optional[float] = None
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
@@ -320,11 +325,16 @@ class ServingEngine:
                  runner: Optional[PagedDecodeRunner] = None,
                  runner_factory=None,
                  backend: Optional[str] = None,
+                 prefill_mode: str = "packed",
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 prefill_max_segments: Optional[int] = None,
                  kv_dtype=jnp.bfloat16,
                  registry: Optional[MetricsRegistry] = None,
                  obs_labels: Optional[Dict[str, Any]] = None):
         if scheduler not in ("continuous", "run_to_completion"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
+        if prefill_mode not in ("packed", "sequential"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.coe = coe
         self.cfg = cfg
         self.max_len = max_len
@@ -378,6 +388,24 @@ class ServingEngine:
         self._dev_tables = _DeviceTableCache(self.pool, self.max_blocks,
                                              self._empty_table)
         self._active_cache: Optional[Tuple[np.ndarray, jnp.ndarray]] = None
+        # packed prefill: bucketed AOT-compiled forwards (serving/prefill.py)
+        # shared by every expert; admission batches pending admits into one
+        # packed call per (expert, bucket) instead of N sequential prefills.
+        # "sequential" keeps the per-prompt prefill_kv path (one jit per
+        # novel length — the recompile-stall baseline the benchmark sweeps).
+        self.prefill_mode = prefill_mode
+        if prefill_mode == "packed":
+            self.prefill_runner: Optional[PackedPrefillRunner] = \
+                PackedPrefillRunner(
+                    cfg,
+                    buckets=prefill_buckets or default_buckets(max_len),
+                    max_segments=prefill_max_segments or n_slots)
+        else:
+            self.prefill_runner = None
+        # TTFT (arrival -> first token) was stored per request but never
+        # aggregated; it now lands in a P2 streaming histogram
+        self._ttft_hist = self._registry.histogram("serve.ttft_s",
+                                                   labels=self._obs_labels)
         # info-style gauge: which decode backend this engine executes
         self._registry.gauge("serve.backend", labels={
             **self._obs_labels,
@@ -460,6 +488,39 @@ class ServingEngine:
                 raise RuntimeError("drain: exceeded max_steps")
         return out
 
+    def warmup(self, expert: Optional[str] = None) -> None:
+        """AOT-compile the serving hot path before traffic arrives: every
+        packed-prefill bucket + its donated pool scatter, and the greedy
+        decode extend for this engine's slot shape. All experts share the
+        backbone, so compiling against one expert's params covers the whole
+        composition — after this, a mixed-length greedy burst triggers zero
+        XLA compilations (tests/test_prefill.py enforces it via the
+        ``prefill.record_compile`` hook). Speculative deployments still pay
+        the draft model's own first-shape compiles."""
+        names = self.coe.expert_names()
+        if not names:
+            raise RuntimeError("warmup: no experts registered")
+        name = expert if expert is not None else (self._active_expert
+                                                 or names[0])
+        t0 = time.perf_counter()
+        params = self.coe.cache.activate(name)
+        self.stats.switch_s += time.perf_counter() - t0
+        with trace.span("warmup", cat="engine", expert=name):
+            if self.prefill_runner is not None:
+                self.prefill_runner.warmup(params, self.pool)
+            # one all-inactive extend compiles + runs the (n_slots, 1) step;
+            # garbage K/V lands in the scratch block, the pool arrays are
+            # donated and reassigned exactly like a real round
+            tables = jnp.asarray(np.stack([self._empty_table] * self.n_slots))
+            lengths = jnp.zeros((self.n_slots,), jnp.int32)
+            active = jnp.zeros((self.n_slots,), bool)
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            logits, pk, pv = self.runner.extend(
+                params, self.pool.k, self.pool.v, tables, lengths, active,
+                toks)
+            self.pool.k, self.pool.v = pk, pv
+            jnp.argmax(logits[:, -1], axis=-1).block_until_ready()
+
     # -- scheduling internals --------------------------------------------
     def _blocks_for(self, req: Request) -> int:
         need = (len(req.tokens) + req.max_new_tokens
@@ -537,14 +598,35 @@ class ServingEngine:
                            if r.expert == self._active_expert
                            and r not in starving]
             candidates = starving + active_reqs
-        admitted = []
-        for r in candidates:
-            if not free:
-                break
-            if self._blocks_for(r) > self.pool.free_blocks:
-                break                        # KV backpressure: stop admitting
-            self._prefill_into_slot(free.pop(0), r, done)
-            admitted.append(r)
+        if self.prefill_runner is None:
+            admitted = []
+            for r in candidates:
+                if not free:
+                    break
+                if self._blocks_for(r) > self.pool.free_blocks:
+                    break                    # KV backpressure: stop admitting
+                if r.handoff is not None:
+                    self._adopt_into_slot(free.pop(0), r, done)
+                else:
+                    self._prefill_into_slot(free.pop(0), r, done)
+                admitted.append(r)
+        else:
+            # packed admission: select this step's admits first (slot count
+            # + planned-block backpressure, same break semantics as the
+            # sequential loop), then run ONE packed prefill per
+            # (expert, bucket-capacity chunk) instead of N sequential calls
+            admitted = []
+            planned = 0
+            for r in candidates:
+                if len(admitted) >= len(free):
+                    break
+                need = self._blocks_for(r)
+                if planned + need > self.pool.free_blocks:
+                    break                    # KV backpressure: stop admitting
+                admitted.append(r)
+                planned += need
+            if admitted:
+                self._admit_packed(admitted, free, done)
         if admitted:
             # age only requests passed over while the active group consumed
             # admission capacity — idle tail steps (free slots, nothing to
@@ -568,8 +650,10 @@ class ServingEngine:
             self._params = self.coe.cache.activate(self._active_expert)
         self.stats.switch_s += time.perf_counter() - t0
         t0 = time.perf_counter()
+        S = len(req.tokens)
         with trace.span("prefill", cat="engine", request_id=req.rid,
-                        expert=req.expert, prompt_tokens=len(req.tokens)):
+                        expert=req.expert, prompt_tokens=S,
+                        **{"prefill.bucket": S, "prefill.packed": 0}):
             last, k, v = self.runner.prefill_kv(params,
                                                 jnp.asarray(req.tokens[None]))
             first = int(jnp.argmax(last))
@@ -581,9 +665,107 @@ class ServingEngine:
             self.pool.reserve(req.rid,
                               req.max_new_tokens + self.policy.reserve_slack)
         self.stats.prefill_s += time.perf_counter() - t0
+        # sequential prefill runs at the raw prompt length: the bucket
+        # label IS the length (the packed path labels real buckets)
+        self._registry.counter("serve.prefill_bucket", labels={
+            **self._obs_labels, "bucket": S}).inc()
+        self._slot_ready(slot_idx, req, int(first), params, done)
+
+    def _admit_packed(self, reqs: List[Request], free: List[int],
+                      done: List[Request]):
+        """Admit this step's selected requests via packed prefill: adopt
+        handed-off state first (no forward needed), then group the rest by
+        expert (selection order preserved — starving before active) and run
+        one packed call per bucket-capacity chunk."""
+        todo: List[Request] = []
+        for r in reqs:
+            if r.handoff is not None:
+                self._adopt_into_slot(free.pop(0), r, done)
+            else:
+                todo.append(r)
+        groups: Dict[str, List[Request]] = {}
+        for r in todo:
+            groups.setdefault(r.expert, []).append(r)
+        foreign = False
+        pr = self.prefill_runner
+        for expert, rs in groups.items():
+            t0 = time.perf_counter()
+            params = self.coe.cache.activate(expert)
+            self.stats.switch_s += time.perf_counter() - t0
+            if expert != self._active_expert:
+                foreign = True
+            for idx in plan_packs([len(r.tokens) for r in rs], pr.buckets,
+                                  pr.max_segments):
+                self._prefill_chunk([rs[i] for i in idx], params, free, done)
+        if foreign and self._active_expert is not None:
+            # a foreign (starving) admission may have evicted the decoding
+            # expert; re-activate once for the whole batch (same invariant
+            # as the sequential path, minus per-request churn)
+            t0 = time.perf_counter()
+            self._params = self.coe.cache.activate(self._active_expert)
+            self.stats.switch_s += time.perf_counter() - t0
+
+    def _prefill_chunk(self, reqs: List[Request], params, free: List[int],
+                       done: List[Request]):
+        """One packed prefill call: forward at the bucket shape, per-request
+        pool bookkeeping, one donated scatter for the whole bucket."""
+        for r in reqs:
+            trace.instant("admit", cat="engine", request_id=r.rid,
+                          expert=r.expert, slot=-1)
+        t0 = time.perf_counter()
+        with trace.span("prefill", cat="engine",
+                        request_ids=",".join(str(r.rid) for r in reqs),
+                        expert=reqs[0].expert,
+                        prompt_tokens=sum(len(r.tokens) for r in reqs),
+                        **{"prefill.packed": len(reqs)}) as sp:
+            res = self.prefill_runner(params, [r.tokens for r in reqs])
+            sp.add(**{"prefill.bucket": res.bucket})
+            firsts = np.asarray(jnp.argmax(res.logits[:len(reqs)], axis=-1),
+                                np.int32)
+            # reserve prompt + whole output budget up front (same
+            # over-admission guard as the sequential path)
+            self.prefill_runner.scatter_into(
+                self.pool, res, [r.rid for r in reqs],
+                extra_tokens=[r.max_new_tokens + self.policy.reserve_slack
+                              for r in reqs])
+        self.stats.prefill_s += time.perf_counter() - t0
+        self._registry.counter("serve.prefill_bucket", labels={
+            **self._obs_labels, "bucket": res.bucket}).inc(len(reqs))
+        for i, r in enumerate(reqs):
+            self._slot_ready(free.pop(0), r, int(firsts[i]), params, done)
+
+    def _adopt_into_slot(self, slot_idx: int, req: Request,
+                         done: List[Request]):
+        """Adopt prefill state computed by a disaggregated prefill group:
+        append the handed-off K/V blocks into this engine's pool and seat
+        the request as if it had just been prefilled locally. No forward
+        runs and no expert activation is needed — the handoff already
+        carries the first token."""
+        trace.instant("admit", cat="engine", request_id=req.rid,
+                      expert=req.expert, slot=slot_idx, handoff=1)
+        h = req.handoff
+        t0 = time.perf_counter()
+        with trace.span("adopt_handoff", cat="engine", request_id=req.rid,
+                        expert=req.expert, prompt_tokens=len(req.tokens),
+                        kv_bytes=h.nbytes()):
+            self.pool.open(req.rid)
+            self.pool.append(req.rid, jnp.asarray(h.k), jnp.asarray(h.v))
+            self.pool.reserve(req.rid,
+                              req.max_new_tokens + self.policy.reserve_slack)
+        self.stats.prefill_s += time.perf_counter() - t0
+        req.handoff = None                   # blocks landed; drop the copy
+        self._slot_ready(slot_idx, req, h.first_token, None, done)
+
+    def _slot_ready(self, slot_idx: int, req: Request, first: int, params,
+                    done: List[Request]):
+        """Shared admission tail: timestamps, TTFT histogram, slot seating,
+        policy callback, immediate finish for max_new_tokens == 1."""
         now = time.perf_counter()
-        req.prefill_done_s = now
-        req.first_token_s = now
+        if req.prefill_done_s is None:       # handoffs carry their own stamp
+            req.prefill_done_s = now
+        if req.first_token_s is None:
+            req.first_token_s = now
+            self._ttft_hist.observe(req.first_token_s - req.arrival_s)
         self.stats.admitted += 1
         self.stats.tokens_out += 1
         slot = _Slot(req=req, expert=req.expert, last_token=first,

@@ -144,6 +144,7 @@ def test_placement_uniform_fallback_without_demand():
 
 
 # ------------------------------------------- acceptance test (subprocess)
+@pytest.mark.slow
 def test_node_2x4_matches_single_engine_bit_exact():
     """ISSUE 5 acceptance: on 8 emulated CPU devices, a TP=2 x 4-group node
     reproduces the single-device engine's greedy outputs bit-for-bit for
@@ -226,6 +227,102 @@ def test_node_2x4_matches_single_engine_bit_exact():
         print("NODE_BIT_EXACT_OK", st.tokens_out, round(st.imbalance, 3))
     """)
     assert "NODE_BIT_EXACT_OK" in out
+
+
+@pytest.mark.slow
+def test_node_disaggregated_matches_colocated_bit_exact():
+    """ISSUE 8 acceptance: a node with one socket group dedicated to prefill
+    (``prefill_groups=1``) and three decode groups produces greedy token
+    streams identical to the colocated 4-group node for the same trace; the
+    prefill-group -> decode-group paged-KV handoff never violates any
+    group's HBM budget, both nodes' staging/decode pools leak nothing, and
+    the AOT-warmed prefill buckets trigger zero post-warmup compilations.
+
+    Groups are TP=1 here (the same shape ``--sweep-prefill``'s disagg axis
+    gates): with one device per group the packed forward is placement-
+    independent, so the comparison is bit-for-bit. TP>1 prefill groups run
+    the same GSPMD path but a near-tie in the worker's first-token argmax
+    can resolve differently under a different psum order, so cross-shape
+    identity is only asserted at TP=1 (see docs/architecture.md)."""
+    out = _run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.core import CompositionOfExperts, ExpertHandle
+        from repro.models import get_model
+        from repro.serving import Request
+        from repro.serving.prefill import compile_count
+        from repro.node import make_node_topology, RDUNode
+
+        class FirstTokenRouter:              # expert = first prompt token % n
+            def __init__(self, n): self.n = n
+            def route(self, params, tokens):
+                return jnp.asarray(np.asarray(tokens)[:, 0] % self.n)
+
+        cfg = reduced(get_config("samba-coe-expert-7b"))
+        m = get_model(cfg)
+        rng = jax.random.PRNGKey(0)
+        n_exp = 3
+        experts = [jax.tree.map(np.asarray,
+                                m.init(jax.random.fold_in(rng, i)))
+                   for i in range(n_exp)]
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+
+        rs = np.random.RandomState(0)
+        trace = []
+        for i in range(10):                  # mixed prompt lengths 4..15
+            S = 4 + rs.randint(0, 12)
+            p = rs.randint(0, cfg.vocab_size, (S,)).astype(np.int32)
+            p[0] = p[0] - (p[0] % n_exp) + (i % n_exp)
+            trace.append((i, p, 3 + i % 4))
+
+        def run(prefill_groups):
+            node = RDUNode(make_node_topology(1, 4), cfg,
+                           FirstTokenRouter(n_exp), None,
+                           group_hbm_bytes=int(2.5 * nbytes),
+                           group_kv_reserve_bytes=int(0.8 * nbytes),
+                           n_slots=2, block_size=8, max_len=24,
+                           prefill_groups=prefill_groups)
+            for i, h in enumerate(experts):
+                node.register_expert(f"e{i}", h)
+            node.warmup()
+            n_warm = compile_count()
+            for rid, toks, n in trace:
+                gid = node.submit(Request(rid=rid, tokens=toks,
+                                          max_new_tokens=n))
+                if prefill_groups:           # admits land on the worker
+                    assert gid == 0, gid
+            done, steps = {}, 0
+            while node.has_work:
+                for r in node.step():
+                    done[r.rid] = (r.expert, r.output)
+                assert node.hbm_within_budget(), "HBM budget exceeded"
+                steps += 1
+                assert steps < 10000
+            assert len(done) == len(trace), "a request starved"
+            for gs in node.groups:
+                assert gs.engine.pool.stats.blocks_in_use == 0
+            for w in node.workers:
+                assert w.pool.stats.blocks_in_use == 0
+            st = node.stats()
+            compiles = compile_count() - n_warm
+            node.close()
+            return done, st, compiles
+
+        co_done, co_st, co_compiles = run(prefill_groups=0)
+        dis_done, dis_st, dis_compiles = run(prefill_groups=1)
+        assert co_compiles == 0, f"colocated recompiled: {co_compiles}"
+        assert dis_compiles == 0, f"disagg recompiled: {dis_compiles}"
+        assert len(dis_st.prefill_groups) == 1
+        assert len(co_st.prefill_groups) == 0
+        for rid, (ce, co) in co_done.items():
+            de, do = dis_done[rid]
+            assert ce == de, (rid, ce, de)
+            assert (co == do).all(), f"rid {rid}: {co} vs {do}"
+        print("DISAGG_PARITY_OK", dis_st.tokens_out)
+    """)
+    assert "DISAGG_PARITY_OK" in out
 
 
 # --------------------------------------------- in-process 8-device tests
