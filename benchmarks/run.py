@@ -978,6 +978,246 @@ def bench_sweep_prefill(tiny: bool = False):
 
 
 # ----------------------------------------------------------------------
+# Tenancy sweep: prefix sharing + sessions vs re-prefill-everything
+# ----------------------------------------------------------------------
+def bench_sweep_tenancy(tiny: bool = False):
+    """Trace-replay tenancy sweep: a population of multi-turn sessions with
+    a realistic prompt-share distribution (70% of sessions open with one of
+    a handful of per-tenant system prompts; turn counts mixed 1-3; each
+    turn re-sends the whole conversation plus fresh user tokens) is
+    replayed wave-by-wave against TWO engines on identical traffic:
+
+      * ``shared``   — ``prefix_sharing=True``: the PrefixIndex dedups the
+        system prompts across sessions, SessionManager retention hands each
+        session's history KV to its next turn, and hits prefill only the
+        un-shared suffix;
+      * ``unshared`` — the baseline engine, which re-prefills every prompt
+        token of every turn.
+
+    Measures shared-vs-unshared TTFT p99, the fraction of prompt tokens
+    whose prefill was avoided, and KV bytes deduplicated. float32 weights
+    and KV (the strict-parity dtype): the greedy token streams of the two
+    engines are asserted byte-identical — sharing must change WHERE bytes
+    live, never WHAT tokens come out. After each shared run the retained
+    state is released and the pool is asserted fully recycled (zero leaked
+    blocks). A final ungated pass drives the shared engine through
+    ``StreamingFrontend`` (per-tenant quotas + streaming callbacks)."""
+    import hashlib
+
+    from repro.configs import get_config, reduced
+    from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+    from repro.models import get_model
+    from repro.serving import (QuotaExceeded, Request, ServingEngine,
+                               StreamingFrontend, TenantQuota)
+
+    cfg = reduced(get_config("samba-coe-expert-7b"))
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    n_exp = 2
+    f32 = lambda t: jax.tree.map(
+        lambda x: np.asarray(x, np.float32)
+        if x.dtype == jnp.bfloat16 else np.asarray(x), t)
+    experts = [f32(jax.tree.map(np.asarray,
+                                m.init(jax.random.fold_in(rng, i))))
+               for i in range(n_exp)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+
+    max_len = 256
+    n_slots = 4 if tiny else 8
+    n_sessions = 12 if tiny else 30
+    repeats = 2
+
+    # ---- the session trace (fixed across engines and repeats) -----------
+    # 70% of sessions open with one of two shared system prompts; the rest
+    # carry a private prompt of the same length. User turns append 8-24
+    # fresh tokens; turn counts cycle 1/2/3 (mean 2 — short-chat regime).
+    # The 96-token system prompt keeps prefill compute (what sharing
+    # avoids) the dominant TTFT term even at reduced model scale.
+    rs = np.random.RandomState(7)
+    SYS = 96
+    sys_prompts = [rs.randint(1, cfg.vocab_size, (SYS,)).astype(np.int32)
+                   for _ in range(2)]
+    sessions = []
+    for s in range(n_sessions):
+        shared_sys = s < int(round(0.7 * n_sessions))
+        sysp = (sys_prompts[s % 2] if shared_sys
+                else rs.randint(1, cfg.vocab_size, (SYS,)).astype(np.int32))
+        turns = 1 + (s % 3)
+        sessions.append({
+            "sid": f"s{s}", "expert": f"e{s % n_exp}", "sys": sysp,
+            "turns": turns, "shared_sys": shared_sys,
+            "user": [rs.randint(1, cfg.vocab_size,
+                                (int(rs.randint(8, 25)),)).astype(np.int32)
+                     for _ in range(turns)],
+            # short replies keep the TTFT tail prefill-bound (what
+            # sharing avoids) rather than decode-queueing-bound
+            "new": [int(rs.randint(2, 6)) for _ in range(turns)]})
+    max_turns = max(s["turns"] for s in sessions)
+
+    def mk_engine(sharing: bool) -> ServingEngine:
+        coe = CompositionOfExperts(HashRouter(n_exp), None,
+                                   int(2.5 * nbytes))
+        for i, h in enumerate(experts):
+            coe.register(ExpertHandle(f"e{i}", cfg, h))
+        return ServingEngine(coe, cfg, max_len=max_len, n_slots=n_slots,
+                             block_size=8, prefix_sharing=sharing,
+                             kv_dtype=jnp.float32)
+
+    def replay(sharing: bool):
+        eng = mk_engine(sharing)
+        eng.warmup()
+        # primer: serve one request per shared system prompt per expert so
+        # the timed waves hit a WARM index — steady-state serving, not a
+        # cold start (run on both engines: same compiles, same cache state)
+        for j, sp in enumerate(sys_prompts):
+            for e in range(n_exp):
+                eng.submit(Request(
+                    rid=900_000 + j * n_exp + e,
+                    tokens=np.concatenate([sp, np.asarray([j + 1], np.int32)]),
+                    max_new_tokens=2, expert=f"e{e}"))
+        eng.drain()
+        eng.stats.reset()
+        hit0 = eng.stats.prefix_hit_tokens      # reset() zeroes; belt+braces
+        cow0 = eng.pool.stats.cow_splits
+
+        outs, ttfts = {}, []
+        history = {}                 # sid -> committed conversation tokens
+        prompt_tokens = 0
+        t0 = time.perf_counter()
+        for w in range(max_turns):
+            wave = [s for s in sessions if s["turns"] > w]
+            batch = []
+            for s in wave:
+                prev = history.get(s["sid"])
+                base = s["sys"] if prev is None else prev
+                p = np.concatenate([base, s["user"][w]])
+                rid = w * 1000 + int(s["sid"][1:])
+                batch.append((s, rid, p))
+                prompt_tokens += len(p)
+                eng.submit(Request(
+                    rid=rid, tokens=p, max_new_tokens=s["new"][w],
+                    expert=s["expert"],
+                    session_id=s["sid"] if sharing else None))
+            done = {r.rid: r for r in eng.drain()}
+            for s, rid, p in batch:
+                r = done[rid]
+                outs[rid] = r.output
+                ttfts.append(r.first_token_s - r.arrival_s)
+                # next turn re-sends conversation so far (prompt + output)
+                history[s["sid"]] = np.concatenate(
+                    [p, r.output]).astype(np.int32)
+        wall = time.perf_counter() - t0
+
+        hit = int(eng.stats.prefix_hit_tokens - hit0)
+        cow = int(eng.pool.stats.cow_splits - cow0)
+        digest = hashlib.sha256(
+            b"".join(outs[i].tobytes()
+                     for i in sorted(outs))).hexdigest()[:16]
+        per_tok = eng.pool._per_block_bytes() / eng.block
+        if sharing:
+            # zero-leak invariant: dropping retained sessions + the index
+            # must return the pool to empty — refcounting never strands a
+            # block
+            eng.release_shared()
+            if eng.pool.stats.blocks_in_use != 0:
+                raise AssertionError(
+                    f"prefix sharing leaked "
+                    f"{eng.pool.stats.blocks_in_use} blocks after release")
+        return {"wall": wall, "ttft_p99": float(np.percentile(ttfts, 99)),
+                "ttft_p50": float(np.percentile(ttfts, 50)),
+                "digest": digest, "hit_tokens": hit, "cow_splits": cow,
+                "prompt_tokens": prompt_tokens,
+                "kv_bytes_deduped": hit * per_tok,
+                "evictions": (eng.sessions.evictions if sharing else 0)}
+
+    best, rows = {}, []
+    for rep in range(repeats):
+        for mode, sharing in (("unshared", False), ("shared", True)):
+            run = replay(sharing)
+            b = best.setdefault(mode, run)
+            if run["digest"] != b["digest"]:
+                raise AssertionError(
+                    f"{mode} run diverged across repeats "
+                    f"(digest {run['digest']} != {b['digest']})")
+            b["wall"] = min(b["wall"], run["wall"])
+            b["ttft_p99"] = min(b["ttft_p99"], run["ttft_p99"])
+            b["ttft_p50"] = min(b["ttft_p50"], run["ttft_p50"])
+    if best["shared"]["digest"] != best["unshared"]["digest"]:
+        raise AssertionError(
+            "prefix sharing changed the token streams (digest "
+            f"{best['shared']['digest']} != {best['unshared']['digest']})")
+    for mode in ("unshared", "shared"):
+        b = best[mode]
+        rows.append({"mode": mode, "wall_s": b["wall"],
+                     "ttft_p50_s": b["ttft_p50"],
+                     "ttft_p99_s": b["ttft_p99"],
+                     "hit_tokens": b["hit_tokens"],
+                     "cow_splits": b["cow_splits"],
+                     "prompt_tokens": b["prompt_tokens"],
+                     "kv_bytes_deduped": b["kv_bytes_deduped"],
+                     "token_digest": b["digest"]})
+        emit(f"sweep_tenancy_{mode}", b["wall"] * 1e6,
+             f"ttft_p50_ms={b['ttft_p50']*1e3:.0f},"
+             f"ttft_p99_ms={b['ttft_p99']*1e3:.0f},"
+             f"hit_tokens={b['hit_tokens']},"
+             f"cow_splits={b['cow_splits']},digest={b['digest']}")
+    avoided = best["shared"]["hit_tokens"] / best["shared"]["prompt_tokens"]
+    ratio = best["unshared"]["ttft_p99"] / best["shared"]["ttft_p99"]
+    emit("sweep_tenancy_summary", 0.0,
+         f"prefill_tokens_avoided={avoided:.2f},"
+         f"ttft_p99_speedup={ratio:.2f}x,"
+         f"kv_MB_deduped={best['shared']['kv_bytes_deduped']/1e6:.2f},"
+         f"tokens_identical=1")
+
+    # ---- frontend pass (ungated rows): quotas + streaming ---------------
+    eng = mk_engine(sharing=True)
+    eng.warmup()
+    fe = StreamingFrontend(eng, quotas={
+        "paid": TenantQuota(max_concurrent=n_slots),
+        "free": TenantQuota(max_concurrent=1)})
+    streams, rejected = [], 0
+    fe_prompt = np.concatenate(
+        [sys_prompts[0], np.asarray([3, 1, 4], np.int32)])
+    for i in range(4):
+        tenant = "paid" if i < 2 else "free"
+        try:
+            streams.append(fe.submit(fe_prompt, 4, tenant=tenant,
+                                     session_id=f"fe{i}",
+                                     priority=1 if tenant == "paid" else 0,
+                                     slo_ttft_s=5.0))
+        except QuotaExceeded:
+            rejected += 1
+    streamed = sum(len(st.drain()) for st in streams)
+    fe.join(timeout=120)
+    fe.close()
+    eng.release_shared()
+    rows.append({"mode": "frontend", "submitted": len(streams),
+                 "rejected_quota": rejected, "streamed_tokens": streamed})
+    emit("sweep_tenancy_frontend", 0.0,
+         f"submitted={len(streams)},rejected_quota={rejected},"
+         f"streamed_tokens={streamed}")
+
+    metrics = {
+        "tenancy:shared:ttft_p99_s": best["shared"]["ttft_p99"],
+        "tenancy:prefill_tokens_avoided_frac": float(avoided),
+        "tenancy:unshared_vs_shared_ttft_p99": float(ratio),
+        "tenancy:tokens_identical": 1.0,
+    }
+    doc = {"schema": 1,
+           "config": {"arch": "samba-coe-expert-7b(reduced)",
+                      "n_sessions": n_sessions, "n_experts": n_exp,
+                      "sys_prompt_tokens": SYS, "prompt_share": 0.7,
+                      "max_turns": max_turns, "repeats": repeats,
+                      "dtype": "float32", "tiny": tiny},
+           "rows": rows,
+           "kv_bytes_deduped": best["shared"]["kv_bytes_deduped"],
+           "session_evictions": best["shared"]["evictions"],
+           "metrics": _gated_metrics(metrics)}
+    (_results_dir() / "bench_tenancy.json").write_text(
+        json.dumps(doc, indent=1))
+
+
+# ----------------------------------------------------------------------
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -995,6 +1235,10 @@ def main(argv=None) -> None:
                     help="run ONLY the prefill sweep (packed AOT buckets vs "
                          "sequential recompiles; disaggregated vs colocated "
                          "node on 8 emulated sockets)")
+    ap.add_argument("--sweep-tenancy", action="store_true",
+                    help="run ONLY the tenancy sweep (copy-on-write prefix "
+                         "sharing + session retention vs re-prefill "
+                         "baseline; asserts identical token streams)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized sweep configs (fewer experts/requests/"
                          "repeats); used by the bench-smoke CI job")
@@ -1030,10 +1274,12 @@ def main(argv=None) -> None:
         "sweep_switching": bench_sweep_switching,
         "sweep_node": bench_sweep_node,
         "sweep_prefill": bench_sweep_prefill,
+        "sweep_tenancy": bench_sweep_tenancy,
     }
     print("name,us_per_call,derived")
     any_sweep = (args.sweep_arrival or args.sweep_switching
-                 or args.sweep_node or args.sweep_prefill)
+                 or args.sweep_node or args.sweep_prefill
+                 or args.sweep_tenancy)
     if any_sweep:
         if args.sweep_arrival:
             bench_sweep_arrival(tiny=args.tiny, backend=args.backend)
@@ -1043,13 +1289,15 @@ def main(argv=None) -> None:
             bench_sweep_node(tiny=args.tiny)
         if args.sweep_prefill:
             bench_sweep_prefill(tiny=args.tiny)
+        if args.sweep_tenancy:
+            bench_sweep_tenancy(tiny=args.tiny)
     else:
         for name, fn in benches.items():
             if args.only:
                 if args.only != name:
                     continue
             elif name in ("sweep", "sweep_switching", "sweep_node",
-                          "sweep_prefill"):
+                          "sweep_prefill", "sweep_tenancy"):
                 continue          # heavy: opt-in via --sweep-* flags
             fn()
     if args.trace_out is not None:

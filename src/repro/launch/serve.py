@@ -71,13 +71,19 @@ def _make_requests(args, cfg, expert_names):
 
     rs = np.random.RandomState(0)
     n_tagged = int(args.requests * args.tagged_fraction)
+    # --shared-prefix: every prompt opens with the same system-prompt
+    # tokens (what --prefix-sharing engines dedup via the PrefixIndex)
+    shared = rs.randint(0, cfg.vocab_size,
+                        (getattr(args, "shared_prefix", 0),)).astype(np.int32)
     reqs = []
     for i in range(args.requests):
         tag = expert_names[i % len(expert_names)] if i < n_tagged else None
+        unique = max(1, args.prompt_len - len(shared))
+        toks = np.concatenate([
+            shared,
+            rs.randint(0, cfg.vocab_size, (unique,)).astype(np.int32)])
         reqs.append(Request(
-            rid=i,
-            tokens=rs.randint(0, cfg.vocab_size,
-                              (args.prompt_len,)).astype(np.int32),
+            rid=i, tokens=toks,
             max_new_tokens=args.new_tokens, expert=tag))
     return reqs, n_tagged
 
@@ -96,6 +102,7 @@ def _serve_single(args, cfg):
                            scheduler=args.scheduler,
                            backend=args.backend,
                            prefill_mode=args.prefill_mode,
+                           prefix_sharing=args.prefix_sharing,
                            registry=get_registry())
     reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
@@ -114,6 +121,12 @@ def _serve_single(args, cfg):
           f"occupancy {st.mean_occupancy:.2f}, {st.switches} switches")
     print(f"weight cache: {coe.cache.stats}")
     print(f"kv pool: {engine.pool.stats}")
+    if args.prefix_sharing:
+        print(f"prefix sharing: {st.prefix_hit_tokens} prompt tokens "
+              f"adopted from shared KV, "
+              f"{engine.pool.stats.cow_splits} COW splits, "
+              f"{len(engine.prefix_index)} indexed blocks")
+        engine.release_shared()
     print(f"tier ledger: overlap={coe.cache.ledger.overlap_ratio:.2f} "
           f"store_read={coe.cache.ledger.bytes_moved('store_read')}B "
           f"h2d={coe.cache.ledger.bytes_moved('h2d')}B")
@@ -136,6 +149,7 @@ def _serve_node(args, cfg):
                    scheduler=args.scheduler,
                    backend=args.backend,
                    prefill_mode=args.prefill_mode,
+                   prefix_sharing=args.prefix_sharing,
                    prefill_groups=args.prefill_groups,
                    registry=get_registry())
     for name, host, domain in hosts:
@@ -192,6 +206,15 @@ def main(argv=None):
                     help="with --node-shape: dedicate the first N socket "
                     "groups to prefill (disaggregated serving) — their KV "
                     "blocks are handed off to the decode groups")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="enable copy-on-write prefix sharing + session "
+                    "retention in the engine(s): shared prompt prefixes "
+                    "prefill once and later requests adopt the KV blocks "
+                    "read-only (serving/kvcache.py PrefixIndex)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="open every generated prompt with the same N "
+                    "system-prompt tokens (the workload --prefix-sharing "
+                    "dedups)")
     ap.add_argument("--tagged-fraction", type=float, default=0.25,
                     help="fraction of requests submitted caller-tagged; "
                     "the rest are routed by the composition's router")

@@ -171,6 +171,10 @@ class RDUNode:
         self.demand: Dict[str, int] = {}
         self.route_s = 0.0
         self.requests_in = 0
+        # session affinity: a session's retained KV pages live in ONE
+        # group's pool, so later turns must land on that group to adopt
+        # them (prefix_sharing engines); maps session id -> groups index
+        self._session_groups: Dict[str, int] = {}
 
     # -- registry ---------------------------------------------------------
     def register_expert(self, name: str, host_params, domain: str = "general"):
@@ -259,10 +263,18 @@ class RDUNode:
         return gid
 
     def _dispatch_decode(self, req: Request) -> int:
-        """Least-loaded owning decode group; returns its topology gid."""
-        owners = self.placement.owners(req.expert) or tuple(
-            range(len(self.groups)))
-        gi = min(owners, key=lambda g: self.groups[g].load)
+        """Least-loaded owning decode group — unless the request belongs to
+        a session seen before, which sticks to the group holding its
+        retained KV pages (any group can execute any expert; affinity only
+        overrides the load heuristic). Returns the topology gid."""
+        gi = (self._session_groups.get(req.session_id)
+              if req.session_id is not None else None)
+        if gi is None:
+            owners = self.placement.owners(req.expert) or tuple(
+                range(len(self.groups)))
+            gi = min(owners, key=lambda g: self.groups[g].load)
+            if req.session_id is not None:
+                self._session_groups[req.session_id] = gi
         self.groups[gi].engine.submit(req)
         self.groups[gi].submitted += 1
         return self.groups[gi].group.gid

@@ -13,6 +13,14 @@ Pallas kernels; select via ``make_runner(cfg, scratch_row, backend=...)`` or
 power-of-two length bucket at ``ServingEngine.warmup()`` and packs several
 prompts into each call via segment ids — after warmup a mixed-length burst
 triggers zero XLA compilations (``compile_count`` counts them).
+
+Tenancy (``ServingEngine(prefix_sharing=True)``): ``PrefixIndex``
+(kvcache.py) dedups shared prompt prefixes across requests with
+copy-on-write block refcounts, ``SessionManager`` (sessions.py) retains
+finished turns' KV for multi-turn sessions under an HBM-budget-aware
+eviction policy, and ``StreamingFrontend`` (frontend.py) puts per-tenant
+quotas, SLO-aware priority/preemption, and asyncio token streaming in
+front of the engine.
 """
 from repro.serving.backends import (PagedBackend, XlaPagedBackend,
                                     FusedPagedBackend, make_backend,
@@ -24,7 +32,10 @@ from repro.serving.prefill import (PackedPrefillRunner, PrefillHandoff,
                                    compile_count, compile_counts,
                                    record_compile, reset_compile_counts)
 from repro.serving.speculative import SpeculativeDecoder, SpecStats, extend_step
-from repro.serving.kvcache import PagedKVCache, PagedStats
+from repro.serving.kvcache import PagedKVCache, PagedStats, PrefixIndex
+from repro.serving.sessions import SessionManager
+from repro.serving.frontend import (StreamingFrontend, TenantQuota,
+                                    TokenStream, QuotaExceeded)
 
 __all__ = ["ServingEngine", "Request", "ServeStats", "PagedDecodeRunner",
            "PagedBackend", "XlaPagedBackend", "FusedPagedBackend",
@@ -35,4 +46,6 @@ __all__ = ["ServingEngine", "Request", "ServeStats", "PagedDecodeRunner",
            "compile_count", "compile_counts", "record_compile",
            "reset_compile_counts",
            "SpeculativeDecoder", "SpecStats", "extend_step",
-           "PagedKVCache", "PagedStats"]
+           "PagedKVCache", "PagedStats", "PrefixIndex",
+           "SessionManager", "StreamingFrontend", "TenantQuota",
+           "TokenStream", "QuotaExceeded"]

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,10 @@ from repro.core.coe import CompositionOfExperts
 from repro.obs import trace
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.stats import StatsView, counter_field
-from repro.serving.kvcache import PagedKVCache
+from repro.serving.kvcache import PagedKVCache, PrefixIndex
 from repro.serving.prefill import (PackedPrefillRunner, PrefillHandoff,
-                                   default_buckets, plan_packs)
+                                   bucket_for, default_buckets, plan_packs)
+from repro.serving.sessions import SessionManager
 from repro.serving.speculative import SpecStats
 
 
@@ -65,6 +66,17 @@ class Request:
     done_s: Optional[float] = None
     output: Optional[np.ndarray] = None
     skipped: int = 0                    # admission passes survived unadmitted
+    # tenancy (serving/frontend.py + sessions.py): multi-turn session id
+    # (retained KV adopted across turns), per-tenant accounting, SLO-aware
+    # admission priority, and streaming callbacks. Callbacks run on the
+    # engine's thread — keep them cheap (the frontend just enqueues).
+    session_id: Optional[str] = None
+    tenant: str = "default"
+    priority: int = 0
+    slo_ttft_s: Optional[float] = None
+    on_token: Optional[Callable[["Request", int], None]] = None
+    on_done: Optional[Callable[["Request"], None]] = None
+    prefix_hit_tokens: int = 0          # prompt tokens adopted, not prefilled
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -97,6 +109,7 @@ class ServeStats(StatsView):
     decode_rounds = counter_field()
     switches = counter_field()
     starvation_overrides = counter_field()
+    prefix_hit_tokens = counter_field()  # prompt tokens served from shared KV
     occupancy_sum = counter_field(0.0)  # Σ active_slots/n_slots per round
     route_s = counter_field(0.0)
     switch_s = counter_field(0.0)
@@ -328,6 +341,8 @@ class ServingEngine:
                  prefill_mode: str = "packed",
                  prefill_buckets: Optional[Sequence[int]] = None,
                  prefill_max_segments: Optional[int] = None,
+                 prefix_sharing: bool = False,
+                 session_max_bytes: Optional[int] = None,
                  kv_dtype=jnp.bfloat16,
                  registry: Optional[MetricsRegistry] = None,
                  obs_labels: Optional[Dict[str, Any]] = None):
@@ -348,10 +363,18 @@ class ServingEngine:
                             // block_size)
 
         if kv_budget_bytes is None:
-            # default: every slot can hold a full-length request, + scratch
+            # default: every slot can hold a full-length request, + scratch.
+            # Under prefix sharing the index and retained sessions hold
+            # blocks BETWEEN requests; sized only for the slots, retention
+            # would compete with admission permanently (backpressure then
+            # trickles admits in one at a time and decode occupancy
+            # collapses), so the shared pool gets 2x the slot capacity —
+            # retention lives in the slack and is still reclaimed, via the
+            # pool's reclaimer protocol, whenever admission really needs it
+            slot_blocks = self.n_slots * self.max_blocks
+            pool_blocks = slot_blocks * (2 if prefix_sharing else 1) + 1
             kv_budget_bytes = coe.hbm_budget.kv_bytes or (
-                (self.n_slots * self.max_blocks + 1)
-                * PagedKVCache.block_bytes(
+                pool_blocks * PagedKVCache.block_bytes(
                     block_size, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
                     kv_dtype))
         # one registry backs the engine's ServeStats and the pool's
@@ -402,6 +425,29 @@ class ServingEngine:
                     max_segments=prefill_max_segments or n_slots)
         else:
             self.prefill_runner = None
+        # copy-on-write prefix sharing + multi-turn session retention: a
+        # PrefixIndex over the pool's blocks dedups prompts shared across
+        # requests; a SessionManager keeps finished turns' pages resident
+        # for the session's next turn. Both hold pool blocks speculatively
+        # and hand them back under admission pressure via the pool's
+        # reclaimer protocol — KV pages competing for the HBM tier exactly
+        # like expert weights compete in the weight cache.
+        self.prefix_sharing = prefix_sharing
+        if prefix_sharing:
+            self.sessions: Optional[SessionManager] = SessionManager(
+                self.pool, ledger=coe.cache.ledger,
+                max_bytes=session_max_bytes)
+            self.prefix_index: Optional[PrefixIndex] = PrefixIndex(self.pool)
+            # sessions reclaim first: one conversation's pages are cheaper
+            # to lose than a prefix shared across many live sessions
+            self.pool.add_reclaimer(self.sessions)
+            self.pool.add_reclaimer(self.prefix_index)
+            # suffix prefill rides the decode extend at these widths
+            self._suffix_buckets: Tuple[int, ...] = tuple(
+                prefill_buckets or default_buckets(max_len))
+        else:
+            self.sessions = None
+            self.prefix_index = None
         # TTFT (arrival -> first token) was stored per request but never
         # aggregated; it now lands in a P2 streaming histogram
         self._ttft_hist = self._registry.histogram("serve.ttft_s",
@@ -520,12 +566,41 @@ class ServingEngine:
                 toks)
             self.pool.k, self.pool.v = pk, pv
             jnp.argmax(logits[:, -1], axis=-1).block_until_ready()
+            if self.prefix_sharing:
+                # suffix prefill (prefix hits) runs the decode extend at
+                # bucket widths — compile each all-inactive now so a hit
+                # never pays a mid-traffic XLA compile
+                for g in self._suffix_buckets:
+                    toks = np.zeros((self.n_slots, g), np.int32)
+                    logits, pk, pv = self.runner.extend(
+                        params, self.pool.k, self.pool.v, tables, lengths,
+                        active, toks)
+                    self.pool.k, self.pool.v = pk, pv
+                    logits.block_until_ready()
 
     # -- scheduling internals --------------------------------------------
     def _blocks_for(self, req: Request) -> int:
         need = (len(req.tokens) + req.max_new_tokens
                 + self.policy.reserve_slack)
         return -(-need // self.block)
+
+    def _planned_blocks(self, req: Request) -> int:
+        # +1 headroom under sharing: adopting a shared partial tail block
+        # can COW-split into one extra fresh block beyond the request's own
+        # need (a hit otherwise needs strictly fewer fresh blocks)
+        return self._blocks_for(req) + (1 if self.prefix_sharing else 0)
+
+    def _avail_blocks(self) -> int:
+        # retained sessions and indexed prefixes hand blocks back under
+        # pressure — gating admission on the free list alone would wedge
+        # the scheduler the moment retention fills the pool
+        n = self.pool.free_blocks
+        if self.prefix_sharing:
+            n += self.pool.reclaimable_blocks()
+        return n
+
+    def _any_active(self) -> bool:
+        return any(s is not None for s in self.slots)
 
     def _pick_expert(self) -> Optional[str]:
         occupied: Dict[str, List[_Slot]] = {}
@@ -598,17 +673,34 @@ class ServingEngine:
                            if r.expert == self._active_expert
                            and r not in starving]
             candidates = starving + active_reqs
+        # backpressure always admits at least one request while the engine
+        # is otherwise idle: under sharing the conservative reclaimable
+        # estimate can undercount cascade reclaim (session eviction exposes
+        # index leaves), and stalling an idle engine would never recover
         if self.prefill_runner is None:
             admitted = []
             for r in candidates:
                 if not free:
                     break
-                if self._blocks_for(r) > self.pool.free_blocks:
+                if (self._planned_blocks(r) > self._avail_blocks()
+                        and (admitted or self._any_active())):
                     break                    # KV backpressure: stop admitting
                 if r.handoff is not None:
                     self._adopt_into_slot(free.pop(0), r, done)
                 else:
-                    self._prefill_into_slot(free.pop(0), r, done)
+                    m = self._match_prefix(r)
+                    if m is not None:
+                        t0 = time.perf_counter()
+                        params = self.coe.cache.activate(r.expert)
+                        if (r.expert != self._active_expert
+                                and self._active_expert is not None):
+                            self._params = self.coe.cache.activate(
+                                self._active_expert)
+                        self.stats.switch_s += time.perf_counter() - t0
+                        self._prefill_suffix([(r, m[0], m[1])], params,
+                                             free, done)
+                    else:
+                        self._prefill_into_slot(free.pop(0), r, done)
                 admitted.append(r)
         else:
             # packed admission: select this step's admits first (slot count
@@ -620,8 +712,9 @@ class ServingEngine:
             for r in candidates:
                 if len(admitted) >= len(free):
                     break
-                need = self._blocks_for(r)
-                if planned + need > self.pool.free_blocks:
+                need = self._planned_blocks(r)
+                if (planned + need > self._avail_blocks()
+                        and (admitted or self._any_active())):
                     break                    # KV backpressure: stop admitting
                 admitted.append(r)
                 planned += need
@@ -694,9 +787,23 @@ class ServingEngine:
             self.stats.switch_s += time.perf_counter() - t0
             if expert != self._active_expert:
                 foreign = True
-            for idx in plan_packs([len(r.tokens) for r in rs], pr.buckets,
-                                  pr.max_segments):
-                self._prefill_chunk([rs[i] for i in idx], params, free, done)
+            # prefix hits prefill only their un-shared suffix (one extend
+            # per n_slots-sized chunk); misses take the packed-bucket path
+            hits: List[Tuple[Request, List[int], int]] = []
+            misses: List[Request] = []
+            for r in rs:
+                m = self._match_prefix(r)
+                if m is not None:
+                    hits.append((r, m[0], m[1]))
+                else:
+                    misses.append(r)
+            for c in range(0, len(hits), self.n_slots):
+                self._prefill_suffix(hits[c:c + self.n_slots], params,
+                                     free, done)
+            for idx in plan_packs([len(r.tokens) for r in misses],
+                                  pr.buckets, pr.max_segments):
+                self._prefill_chunk([misses[i] for i in idx], params, free,
+                                    done)
         if foreign and self._active_expert is not None:
             # a foreign (starving) admission may have evicted the decoding
             # expert; re-activate once for the whole batch (same invariant
@@ -734,6 +841,81 @@ class ServingEngine:
         for i, r in enumerate(reqs):
             self._slot_ready(free.pop(0), r, int(firsts[i]), params, done)
 
+    def _match_prefix(
+            self, req: Request) -> Optional[Tuple[List[int], int]]:
+        """Longest reusable KV prefix for this request: its own session's
+        retained pages first (the whole previous conversation — the longest
+        possible match), then the cross-request prefix index. Returns
+        PINNED ``(blocks, n_tokens)`` (``_prefill_suffix`` adopts then
+        unpins) or ``None``."""
+        if not self.prefix_sharing or req.handoff is not None:
+            return None
+        if len(req.tokens) < 2:
+            return None      # nothing shareable: >= 1 suffix token must run
+        if req.session_id is not None:
+            m = self.sessions.adopt(req.session_id, req.expert, req.tokens)
+            if m is not None:
+                return m
+        return self.prefix_index.match(req.expert, req.tokens)
+
+    def _prefill_suffix(self,
+                        items: List[Tuple[Request, List[int], int]],
+                        params, free: List[int], done: List[Request]):
+        """Admit prefix-hit requests by prefilling ONLY the un-shared
+        suffix: each request is seated read-only on its adopted blocks
+        (first tail write COW-splits) and the suffixes run through the
+        decode extend at the smallest bucket covering the longest one —
+        the shared tokens' forward is skipped entirely, the tentpole win.
+
+        ``items`` holds up to ``n_slots`` ``(req, blocks, n_adopted)``
+        triples for ONE expert, blocks pinned by ``_match_prefix``. Lanes
+        past a short suffix write garbage K/V — beyond the reserved blocks
+        it lands in table padding (the scratch row); inside the reserved
+        slack it sits past the committed length, where decode overwrites
+        before it ever attends (scatter-then-attend)."""
+        t0 = time.perf_counter()
+        lanes: List[Tuple[Request, int, int]] = []
+        for req, blocks, n in items:
+            self.pool.open(req.rid, adopt=blocks, adopt_len=n)
+            self.pool.unpin(blocks)
+            si = len(req.tokens) - n
+            # whole remaining budget up front, same over-admission guard as
+            # the full-prefill paths; reserve COW-splits a shared tail
+            self.pool.reserve(req.rid, si + req.max_new_tokens
+                              + self.policy.reserve_slack)
+            lanes.append((req, n, si))
+        g = bucket_for(max(si for _, _, si in lanes), self._suffix_buckets)
+        toks = np.zeros((self.n_slots, g), np.int32)
+        lengths = np.zeros((self.n_slots,), np.int32)
+        tables = np.stack([self._empty_table] * self.n_slots)
+        active = np.zeros((self.n_slots,), bool)
+        for i, (req, n, si) in enumerate(lanes):
+            toks[i, :si] = req.tokens[n:]
+            lengths[i] = n
+            tables[i] = self.pool.padded_table(req.rid, self.max_blocks)
+            active[i] = True
+        with trace.span("prefill_suffix", cat="engine",
+                        request_ids=",".join(str(r.rid)
+                                             for r, _, _ in lanes),
+                        expert=lanes[0][0].expert,
+                        shared_tokens=sum(n for _, n, _ in lanes),
+                        **{"prefill.bucket": g,
+                           "prefill.packed": len(lanes)}):
+            logits, pk, pv = self.runner.extend(
+                params, self.pool.k, self.pool.v, jnp.asarray(tables),
+                jnp.asarray(lengths), jnp.asarray(active), toks)
+            self.pool.k, self.pool.v = pk, pv
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self._registry.counter("serve.prefill_bucket", labels={
+            **self._obs_labels, "bucket": g}).inc(len(lanes))
+        for i, (req, n, si) in enumerate(lanes):
+            self.pool.advance(req.rid, si)
+            req.prefix_hit_tokens = n
+            self.stats.prefix_hit_tokens += n
+            self._slot_ready(free.pop(0), req, int(nxt[i, si - 1]),
+                             params, done)
+
     def _adopt_into_slot(self, slot_idx: int, req: Request,
                          done: List[Request]):
         """Adopt prefill state computed by a disaggregated prefill group:
@@ -768,6 +950,8 @@ class ServingEngine:
             self._ttft_hist.observe(req.first_token_s - req.arrival_s)
         self.stats.admitted += 1
         self.stats.tokens_out += 1
+        if req.on_token is not None:
+            req.on_token(req, first)
         slot = _Slot(req=req, expert=req.expert, last_token=first,
                      generated=[first], admitted_step=self._step_count)
         # admit on the policy before any possible _finish: on_free must only
@@ -844,6 +1028,9 @@ class ServingEngine:
             slot.generated.extend(toks)
             slot.last_token = toks[-1]
             self.stats.tokens_out += n
+            if slot.req.on_token is not None:
+                for t in toks:
+                    slot.req.on_token(slot.req, int(t))
             if slot.remaining <= 0:
                 self._finish(slot, done)
                 self.slots[i] = None         # immediate slot recycling
@@ -856,9 +1043,54 @@ class ServingEngine:
         req.output = np.asarray(slot.generated[: req.max_new_tokens],
                                 np.int32)
         req.done_s = time.perf_counter()
-        self.pool.free(req.rid)
+        if self.prefix_sharing:
+            # the pool holds KV for every *committed* position (the final
+            # emitted token's KV was never written — decode stopped first),
+            # so index/retain exactly that much of prompt + output
+            seq = np.concatenate(
+                [req.tokens, req.output])[: self.pool.length(req.rid)]
+            self.prefix_index.insert(req.expert, seq,
+                                     self.pool.table(req.rid))
+            if req.session_id is not None:
+                # retention takes over the rid; the session's next turn
+                # adopts these pages instead of re-prefilling the history
+                self.sessions.retain(req.session_id, req.rid, req.expert,
+                                     seq)
+            else:
+                self.pool.free(req.rid)
+        else:
+            self.pool.free(req.rid)
         self.policy.on_free(req.rid)
+        if req.on_done is not None:
+            req.on_done(req)
         trace.async_end("request", id=req.rid, cat="engine",
                         tokens_out=len(req.output),
                         latency_s=req.latency_s)
         done.append(req)
+
+    # -- tenancy accounting ----------------------------------------------
+    def release_shared(self) -> None:
+        """Drop every retained session and indexed prefix (their pool
+        references with them). After a drain this returns the pool to
+        ``blocks_in_use == 0`` — the leak check of the tenancy tests."""
+        if self.sessions is not None:
+            self.sessions.evict_all()
+        if self.prefix_index is not None:
+            self.prefix_index.clear()
+
+    def hbm_in_budget(self) -> bool:
+        """Weights + live KV inside this engine's HBM tier right now: the
+        weight cache within its capacity and — when the budget carves a KV
+        share — the pool within that carve and the two tiers' live bytes
+        within the total. Retained session pages and indexed prefixes count
+        as live KV, which is the point: they compete with weights."""
+        cache = self.coe.cache
+        if cache.used_bytes > cache.capacity:
+            return False
+        b = self.coe.hbm_budget
+        if b.kv_bytes:
+            if self.pool.capacity_bytes() > b.kv_bytes:
+                return False
+            return (cache.used_bytes + self.pool.bytes_in_use()
+                    <= b.total_bytes)
+        return True

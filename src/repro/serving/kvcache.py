@@ -22,10 +22,29 @@ decode slot is a block table here. Two access paths coexist:
 With ``scratch=True`` the pool carries one extra block (index
 ``scratch_index``) that is never allocated to a request: inactive decode
 lanes scatter there so a single compiled step can serve any slot subset.
+
+**Copy-on-write prefix sharing.** Every allocated block carries a refcount:
+one reference per block table that contains it plus one per ``PrefixIndex``
+entry that indexes it. ``open(rid, adopt=...)`` seats a request on blocks
+another request (or the index) already owns — the shared prefix is never
+re-prefilled and never duplicated, the paper's never-copy-hot-bytes
+principle (§IV) applied to the KV tier. Shared blocks are read-only by
+convention: before any write lands in a block with refcount > 1 (a partially
+filled adopted tail), ``_make_tail_writable`` COW-splits it — a fresh block
+is allocated, the shared rows are copied device-side, and the table entry is
+swapped, so no writer can ever mutate bytes another reader attends over.
+``free`` only releases blocks whose refcount reaches zero.
+
+When the free list runs dry the pool asks its registered *reclaimers*
+(session retention, the prefix index — both hold blocks speculatively) to
+give blocks back before raising ``MemoryError`` — KV pages compete for the
+HBM tier exactly like expert weights compete in the LRU weight cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +57,9 @@ from repro.obs.stats import StatsView, counter_field, gauge_field
 class PagedStats(StatsView):
     """KV-pool counters as a view over the metrics registry (``kv.*``
     series). Same serialization surface as ``SwitchStats`` — benchmark
-    JSON rows embed both."""
+    JSON rows embed both. ``shared_blocks`` gauges how many physical
+    blocks currently back more than one reference (the dedup win);
+    ``cow_splits`` counts copy-on-write block splits."""
 
     PREFIX = "kv"
 
@@ -46,6 +67,8 @@ class PagedStats(StatsView):
     frees = counter_field()
     blocks_in_use = gauge_field()
     peak_blocks = gauge_field()
+    shared_blocks = gauge_field()
+    cow_splits = counter_field()
 
 
 class PagedKVCache:
@@ -66,6 +89,11 @@ class PagedKVCache:
         self._free: List[int] = list(range(n_blocks))[::-1]
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
+        self._refs: Dict[int, int] = {}       # block -> reference count
+        # objects with reclaim(need_blocks)->int / reclaimable()->int that
+        # hold blocks speculatively (SessionManager, PrefixIndex) and can
+        # give them back under pool pressure, in registration order
+        self._reclaimers: List[Any] = []
         # monotonic versions of the host bookkeeping, so device-copy caches
         # (engine._DeviceTableCache) can skip re-uploading unchanged
         # tables/lengths every decode round
@@ -130,30 +158,156 @@ class PagedKVCache:
     def length(self, rid: int) -> int:
         return self._lengths[rid]
 
+    def refcount(self, blk: int) -> int:
+        """Current reference count of one block (0 = on the free list)."""
+        return self._refs.get(blk, 0)
+
+    def live_table_refs(self) -> int:
+        """Total block-table references across every open request — the
+        refcount invariant's ground truth (property tests compare
+        ``sum(refcounts)`` against this plus the index/pin references)."""
+        return sum(len(t) for t in self._tables.values())
+
+    def open_rids(self) -> Tuple[int, ...]:
+        return tuple(self._tables)
+
+    # -- reclaim (KV pages vs sessions/index competing for the pool) -------
+    def add_reclaimer(self, reclaimer: Any) -> None:
+        """Register an object holding blocks speculatively. Must expose
+        ``reclaim(need_blocks) -> int`` (release at least this many blocks
+        if possible, return how many were actually freed) and
+        ``reclaimable() -> int`` (a conservative lower bound on what a
+        reclaim could free). Consulted in registration order."""
+        self._reclaimers.append(reclaimer)
+
+    def reclaimable_blocks(self) -> int:
+        """Blocks the registered reclaimers could free on demand — admission
+        backpressure counts these next to ``free_blocks`` so retained
+        sessions can never wedge the scheduler."""
+        return sum(int(r.reclaimable()) for r in self._reclaimers)
+
+    def _reclaim(self, need: int) -> None:
+        """Ask reclaimers for blocks until the free list covers ``need``.
+        Loops while anybody makes progress: evicting a leaf prefix entry can
+        expose its parent as the next victim."""
+        while len(self._free) < need:
+            progress = 0
+            for r in self._reclaimers:
+                if len(self._free) >= need:
+                    return
+                progress += int(r.reclaim(need - len(self._free)))
+            if progress == 0:
+                return
+
+    # -- refcounting -------------------------------------------------------
+    def _alloc_block(self) -> int:
+        if not self._free:
+            self._reclaim(1)
+        if not self._free:
+            raise MemoryError("KV pool exhausted")
+        blk = self._free.pop()
+        self._refs[blk] = 1
+        self.stats.allocs += 1
+        self.stats.blocks_in_use += 1
+        self.stats.peak_blocks = max(self.stats.peak_blocks,
+                                     self.stats.blocks_in_use)
+        return blk
+
+    def _incref(self, blk: int) -> None:
+        r = self._refs[blk]
+        self._refs[blk] = r + 1
+        if r == 1:
+            self.stats.shared_blocks += 1
+
+    def _decref(self, blk: int) -> None:
+        r = self._refs[blk] - 1
+        if r == 0:
+            del self._refs[blk]
+            self._free.append(blk)
+            self.stats.frees += 1
+            self.stats.blocks_in_use -= 1
+        else:
+            self._refs[blk] = r
+            if r == 1:
+                self.stats.shared_blocks -= 1
+
+    def pin(self, blocks: Sequence[int]) -> None:
+        """Take an extra reference on each block — protects a matched prefix
+        from a concurrent reclaim between ``PrefixIndex.match`` and the
+        adopting ``open``. Pair with ``unpin``."""
+        for b in blocks:
+            self._incref(b)
+
+    def unpin(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            self._decref(b)
+
     # -- allocation ---------------------------------------------------------
-    def open(self, rid: int):
+    def open(self, rid: int, adopt: Optional[Sequence[int]] = None,
+             adopt_len: int = 0):
+        """Open a request's block table. With ``adopt``/``adopt_len`` the
+        request starts seated on shared blocks covering its first
+        ``adopt_len`` tokens (a prefix another request already prefilled):
+        each adopted block's refcount is incremented and the blocks are
+        treated as read-only — the first write into the partially filled
+        tail triggers a COW split."""
         if rid in self._tables:
             raise KeyError(f"request {rid} already open")
-        self._tables[rid] = []
-        self._lengths[rid] = 0
+        blocks = [int(b) for b in (adopt or ())]
+        if blocks:
+            if not 0 < adopt_len <= len(blocks) * self.block:
+                raise ValueError(
+                    f"adopt_len={adopt_len} outside ({0}, "
+                    f"{len(blocks) * self.block}]")
+            if adopt_len <= (len(blocks) - 1) * self.block:
+                raise ValueError(
+                    f"adopt_len={adopt_len} leaves the last of "
+                    f"{len(blocks)} adopted blocks unused")
+            for b in blocks:
+                if b not in self._refs:
+                    raise ValueError(f"cannot adopt free block {b}")
+            for b in blocks:
+                self._incref(b)
+        elif adopt_len:
+            raise ValueError("adopt_len without adopted blocks")
+        self._tables[rid] = blocks
+        self._lengths[rid] = adopt_len if blocks else 0
         self.table_version += 1
         self.length_version += 1
+
+    def _make_tail_writable(self, rid: int) -> None:
+        """COW split of a shared, partially filled tail block before a write:
+        copy its rows into a fresh block device-side, swap the table entry,
+        drop one reference on the shared original. Fully filled adopted
+        blocks never need this — writes only ever land at positions >= the
+        request's committed length."""
+        n = self._lengths[rid]
+        if n == 0 or n % self.block == 0:
+            return
+        bi = n // self.block
+        tbl = self._tables[rid]
+        old = tbl[bi]
+        if self._refs[old] <= 1:
+            return
+        new = self._alloc_block()
+        self.k = self.k.at[:, new].set(self.k[:, old])
+        self.v = self.v.at[:, new].set(self.v[:, old])
+        tbl[bi] = new
+        self._decref(old)
+        self.table_version += 1
+        self.stats.cow_splits += 1
 
     def _ensure(self, rid: int, n_tokens: int):
         need_blocks = -(-(self._lengths[rid] + n_tokens) // self.block)
         while len(self._tables[rid]) < need_blocks:
-            if not self._free:
-                raise MemoryError("KV pool exhausted")
-            self._tables[rid].append(self._free.pop())
+            self._tables[rid].append(self._alloc_block())
             self.table_version += 1
-            self.stats.allocs += 1
-            self.stats.blocks_in_use += 1
-            self.stats.peak_blocks = max(self.stats.peak_blocks,
-                                         self.stats.blocks_in_use)
 
     def reserve(self, rid: int, n_tokens: int):
         """Grow the block table so ``n_tokens`` more tokens fit. The engine's
-        jitted step then scatters into the reserved positions directly."""
+        jitted step then scatters into the reserved positions directly —
+        which writes the tail block, so a shared tail is COW-split here."""
+        self._make_tail_writable(rid)
         self._ensure(rid, n_tokens)
 
     def advance(self, rid: int, n_tokens: int):
@@ -169,6 +323,7 @@ class PagedKVCache:
     def append(self, rid: int, k_new, v_new):
         """k_new/v_new (L, n_tokens, kv_heads, head_dim) for one request."""
         L, n, H, dh = k_new.shape
+        self._make_tail_writable(rid)
         self._ensure(rid, n)
         start = self._lengths[rid]
         toks = np.arange(start, start + n)
@@ -188,10 +343,197 @@ class PagedKVCache:
         return k[:, :n], v[:, :n]
 
     def free(self, rid: int):
-        for blk in self._tables.pop(rid):
-            self._free.append(blk)
-            self.stats.frees += 1
-            self.stats.blocks_in_use -= 1
+        """Drop the request's references; blocks whose refcount reaches zero
+        return to the free list. The table entry is removed and BOTH
+        versions are bumped *before* any block becomes reallocatable, so a
+        stale ``_DeviceTableCache`` snapshot keyed on the old version can
+        never gather rows a later request reused."""
+        tbl = self._tables.pop(rid)
         del self._lengths[rid]
         self.table_version += 1
         self.length_version += 1
+        for blk in tbl:
+            self._decref(blk)
+
+
+# ----------------------------------------------------------------------
+# Radix-style prefix index over token-id block hashes
+# ----------------------------------------------------------------------
+
+@dataclass
+class _PrefixEntry:
+    key: bytes
+    parent: bytes
+    block: int
+    tokens: np.ndarray                   # the block's token ids (<= block)
+    last_use: int = 0
+    n_children: int = field(default=0)
+
+
+class PrefixIndex:
+    """Radix-style prefix index over ``PagedKVCache`` blocks.
+
+    Keys are chained hashes of token-id blocks: ``key_i = H(key_{i-1} ||
+    tokens_i)`` rooted at the expert name — KV is only valid for the
+    expert whose weights produced it, so two experts never share blocks
+    even for identical prompts. ``insert`` indexes every *full* block of a
+    finished request's sequence (one extra pool reference each — the block
+    survives the request's ``free``); ``match`` walks the chain over a new
+    prompt and returns the shared blocks plus the matched token count. A
+    match may end with a *partial* tail: the new prompt shares only the
+    first few tokens of an indexed block — the block is adopted anyway
+    (those rows are position-exact) and the adopter's first write COW-splits
+    it. Stored token arrays are compared on every hop, so a hash collision
+    degrades to a miss, never to a wrong adoption.
+
+    The index is a ``PagedKVCache`` reclaimer: under pool pressure it evicts
+    least-recently-used leaf entries whose block nobody else references.
+    """
+
+    def __init__(self, pool: PagedKVCache):
+        self.pool = pool
+        self._entries: Dict[bytes, _PrefixEntry] = {}
+        self._children: Dict[bytes, List[bytes]] = {}
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _root(expert: str) -> bytes:
+        return b"root:" + expert.encode()
+
+    @staticmethod
+    def _key(parent: bytes, tokens: np.ndarray) -> bytes:
+        return hashlib.blake2b(
+            parent + np.ascontiguousarray(tokens, np.int32).tobytes(),
+            digest_size=16).digest()
+
+    # -- write path --------------------------------------------------------
+    def insert(self, expert: str, tokens: np.ndarray,
+               table: Sequence[int]) -> int:
+        """Index the full blocks of a finished sequence (``tokens`` are the
+        first ``pool.length(rid)`` token ids; ``table`` the rid's block
+        table). Returns how many new entries were created. Existing entries
+        are refreshed (LRU), not re-referenced."""
+        self._clock += 1
+        B = self.pool.block
+        key = self._root(expert)
+        created = 0
+        for i in range(min(len(tokens) // B, len(table))):
+            blk_toks = np.ascontiguousarray(tokens[i * B:(i + 1) * B],
+                                            np.int32)
+            child = self._key(key, blk_toks)
+            e = self._entries.get(child)
+            if e is None:
+                self.pool._incref(int(table[i]))
+                e = _PrefixEntry(key=child, parent=key, block=int(table[i]),
+                                 tokens=blk_toks)
+                self._entries[child] = e
+                self._children.setdefault(key, []).append(child)
+                if key in self._entries:
+                    self._entries[key].n_children += 1
+                created += 1
+            e.last_use = self._clock
+            key = child
+        return created
+
+    # -- read path ---------------------------------------------------------
+    def match(self, expert: str,
+              tokens: np.ndarray) -> Optional[Tuple[List[int], int]]:
+        """Longest indexed prefix of ``tokens`` for this expert. Returns
+        ``(blocks, n_tokens)`` with the blocks PINNED (one extra reference
+        each — the caller must ``open(adopt=blocks, ...)`` then ``unpin``),
+        or ``None`` on a miss. Adoption is capped at ``len(tokens) - 1`` so
+        at least one suffix token always runs a forward (the first sampled
+        token needs logits)."""
+        self._clock += 1
+        B = self.pool.block
+        key = self._root(expert)
+        blocks: List[int] = []
+        i = 0
+        while (i + 1) * B <= len(tokens):
+            blk_toks = np.ascontiguousarray(tokens[i * B:(i + 1) * B],
+                                            np.int32)
+            child = self._key(key, blk_toks)
+            e = self._entries.get(child)
+            if e is None or not np.array_equal(e.tokens, blk_toks):
+                break
+            e.last_use = self._clock
+            blocks.append(e.block)
+            key = child
+            i += 1
+        n = i * B
+        rest = np.ascontiguousarray(tokens[n:], np.int32)
+        if len(rest):
+            # partial tail: an indexed child block whose first tokens match
+            # the remaining prompt — adopted read-only, COW on first write
+            best, best_m = None, 0
+            for ck in self._children.get(key, ()):  # noqa: B007
+                e = self._entries.get(ck)
+                if e is None:
+                    continue
+                m = int((np.cumprod(e.tokens[:len(rest)]
+                                    == rest[:len(e.tokens)])).sum())
+                if m > best_m:
+                    best, best_m = e, m
+            if best is not None and best_m > 0:
+                best.last_use = self._clock
+                blocks.append(best.block)
+                n += best_m
+        if n >= len(tokens):            # keep >= 1 token for the forward
+            n = len(tokens) - 1
+            blocks = blocks[: -(-n // B)] if n else []
+        if n == 0:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.pool.pin(blocks)
+        return blocks, n
+
+    # -- eviction / reclaim ------------------------------------------------
+    def _evict(self, e: _PrefixEntry) -> None:
+        del self._entries[e.key]
+        sibs = self._children.get(e.parent)
+        if sibs is not None:
+            sibs.remove(e.key)
+            if not sibs:
+                del self._children[e.parent]
+        p = self._entries.get(e.parent)
+        if p is not None:
+            p.n_children -= 1
+        self.pool._decref(e.block)
+
+    def _victims(self) -> List[_PrefixEntry]:
+        """LRU-ordered leaf entries whose block only the index references —
+        evicting anything else frees no memory (shared block) or strands
+        reachable children (interior node)."""
+        return sorted((e for e in self._entries.values()
+                       if e.n_children == 0
+                       and self.pool.refcount(e.block) == 1),
+                      key=lambda e: e.last_use)
+
+    def reclaimable(self) -> int:
+        return len(self._victims())
+
+    def reclaim(self, need_blocks: int) -> int:
+        freed = 0
+        while freed < need_blocks:
+            vs = self._victims()
+            if not vs:
+                break
+            for e in vs:
+                if freed >= need_blocks:
+                    break
+                self._evict(e)
+                freed += 1
+        return freed
+
+    def clear(self) -> None:
+        """Drop every entry and its pool reference."""
+        while self._entries:
+            for e in list(self._entries.values()):
+                if e.n_children == 0:
+                    self._evict(e)

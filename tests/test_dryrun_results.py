@@ -1,24 +1,32 @@
-"""Integration checks over the recorded multi-pod dry-run artifacts.
+"""Integration checks over the recorded multi-pod dry-run artifacts, plus
+unit tests for the CI benchmark gate itself (``tools/check_bench.py``).
 
-These validate the *results* of deliverable (e)/(g) — every assigned
-(arch x shape x mesh) cell compiled (or was skipped by the documented
-rule), and the roofline terms are physically sane.
+The dry-run half validates the *results* of deliverable (e)/(g) — every
+assigned (arch x shape x mesh) cell compiled (or was skipped by the
+documented rule), and the roofline terms are physically sane. Those tests
+skip when the artifact hasn't been generated; the gate unit tests always
+run (the gate guards every bench-smoke job, so its own failure modes —
+especially a baseline-named metric silently missing from the produced
+JSON — need coverage that doesn't depend on artifacts).
 """
 import json
+import sys
 from pathlib import Path
 
 import pytest
 
-RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun.json"
+REPO = Path(__file__).resolve().parent.parent
+RESULTS = REPO / "results" / "dryrun.json"
 
-pytestmark = pytest.mark.skipif(not RESULTS.exists(),
-                                reason="dry-run results not generated yet")
+dryrun = pytest.mark.skipif(not RESULTS.exists(),
+                            reason="dry-run results not generated yet")
 
 
 def _load():
     return json.loads(RESULTS.read_text())
 
 
+@dryrun
 def test_all_80_cells_recorded():
     from repro.configs import ARCH_IDS, SHAPE_CELLS
     d = _load()
@@ -35,6 +43,7 @@ def test_all_80_cells_recorded():
     assert not bad, bad
 
 
+@dryrun
 def test_skips_only_long500k_full_attention():
     d = _load()
     for k, v in d.items():
@@ -45,6 +54,7 @@ def test_skips_only_long500k_full_attention():
                                 "xlstm-1.3b"), k
 
 
+@dryrun
 def test_subquadratic_archs_run_long500k():
     d = _load()
     for arch in ("mixtral-8x7b", "recurrentgemma-9b", "xlstm-1.3b"):
@@ -52,6 +62,7 @@ def test_subquadratic_archs_run_long500k():
         assert d[f"{arch}|long_500k|multi"]["status"] == "ok"
 
 
+@dryrun
 def test_roofline_terms_sane():
     d = _load()
     for k, v in d.items():
@@ -67,6 +78,7 @@ def test_roofline_terms_sane():
             assert r["useful_flops_ratio"] < 1.6, (k, r["useful_flops_ratio"])
 
 
+@dryrun
 def test_multi_pod_halves_per_chip_work():
     """Doubling chips (2 pods) should not increase per-chip compute time."""
     d = _load()
@@ -82,6 +94,7 @@ def test_multi_pod_halves_per_chip_work():
         assert m["roofline"]["compute_s"] <= v["roofline"]["compute_s"] * 1.2, k
 
 
+@dryrun
 def test_decode_cells_memory_bound():
     """The paper's decode regime: weights+cache streaming dominates."""
     d = _load()
@@ -93,3 +106,68 @@ def test_decode_cells_memory_bound():
         if arch == "whisper-small":      # tiny enc-dec: relayout dominates
             continue
         assert v["roofline"]["bottleneck"] == "memory", (k, v["roofline"])
+
+
+# ----------------------------------------------------------------------
+# tools/check_bench.py unit tests (always run — no artifacts needed)
+# ----------------------------------------------------------------------
+
+sys.path.insert(0, str(REPO / "tools"))
+import check_bench  # noqa: E402
+
+
+def test_check_bench_missing_metric_fails():
+    """A baseline-named metric absent from the results must fail the gate
+    AND appear in the printed report body — a renamed benchmark metric
+    must never silently stop being gated."""
+    failures, lines = check_bench.check(
+        current={"present:metric": 1.0},
+        baseline={"present:metric": {"value": 1.0, "threshold": 0.3},
+                  "renamed:metric": {"value": 2.0, "threshold": 0.3}},
+        threshold=0.3)
+    assert len(failures) == 1
+    assert "MISSING" in failures[0] and "renamed:metric" in failures[0]
+    assert any("MISSING" in ln and "renamed:metric" in ln for ln in lines), \
+        "missing metric must be visible in the report body, not only the " \
+        "failure summary"
+
+
+def test_check_bench_floor_and_ceiling_direction():
+    """higher_is_better=True gates a floor; False flips to a ceiling."""
+    failures, _ = check_bench.check(
+        current={"tps": 0.6, "p99": 1.5},
+        baseline={"tps": {"value": 1.0, "threshold": 0.3},
+                  "p99": {"value": 1.0, "threshold": 0.3,
+                          "higher_is_better": False}},
+        threshold=0.3)
+    assert len(failures) == 2                 # 0.6 < 0.7 floor; 1.5 > 1.3
+    ok, _ = check_bench.check(
+        current={"tps": 0.8, "p99": 1.2},
+        baseline={"tps": {"value": 1.0, "threshold": 0.3},
+                  "p99": {"value": 1.0, "threshold": 0.3,
+                          "higher_is_better": False}},
+        threshold=0.3)
+    assert not ok
+
+
+def test_check_bench_untracked_metric_passes():
+    """Metrics in the results with no baseline entry are reported as
+    untracked, never failed."""
+    failures, lines = check_bench.check(
+        current={"gated": 1.0, "brand_new": 123.0},
+        baseline={"gated": 1.0}, threshold=0.3)
+    assert not failures
+    assert any("untracked" in ln and "brand_new" in ln for ln in lines)
+
+
+def test_check_bench_main_exit_codes(tmp_path):
+    base = tmp_path / "baseline.json"
+    res = tmp_path / "bench.json"
+    base.write_text(json.dumps(
+        {"metrics": {"m": {"value": 1.0, "threshold": 0.3}}}))
+    res.write_text(json.dumps({"metrics": {"m": 1.0}}))
+    assert check_bench.main([str(res), "--baseline", str(base)]) == 0
+    res.write_text(json.dumps({"metrics": {"m_renamed": 1.0}}))
+    assert check_bench.main([str(res), "--baseline", str(base)]) == 1
+    assert check_bench.main([str(tmp_path / "nope.json"),
+                             "--baseline", str(base)]) == 2

@@ -56,8 +56,13 @@ def check(current: dict, baseline: dict, threshold: float):
         else:
             ref_value, band = float(ref), threshold
         if name not in current:
-            failures.append(f"MISSING  {name}: not in results "
-                            f"(baseline {ref_value:g})")
+            # a baseline-named metric absent from the produced JSON means a
+            # benchmark was renamed/dropped and silently stopped being
+            # gated — fail loudly, in the report body AND the failure list
+            lines.append(f"{'MISSING':10s} {name}: not in results "
+                         f"(baseline {ref_value:g}) — renamed or dropped "
+                         f"metric is no longer gated")
+            failures.append(lines[-1])
             continue
         cur = float(current[name])
         if higher:
