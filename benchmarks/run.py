@@ -475,17 +475,30 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
     operational intensity next to ``core/fusion.py``'s predictions. These
     runs use float32 weights and KV (the backends' strict-parity dtype —
     see ``serving/backends.py``), so with ``backend='both'`` the greedy
-    token streams are asserted identical across backends."""
+    token streams are asserted identical across backends.
+
+    Every replayed request carries generous TTFT+TPOT deadlines, so the
+    sweep also reports **goodput** (SLO-met tokens/s, ``obs.slo``) and SLO
+    attainment per scheduler and per backend: on a healthy engine nearly
+    every request meets the deadlines and goodput tracks throughput; a
+    scheduling collapse (queueing wedge, stalled decode) turns the missed
+    deadlines into a goodput drop the CI gate catches even when raw
+    tokens/s survives."""
     import hashlib
 
     from repro.configs import get_config, reduced
     from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
     from repro.core.fusion import backend_prediction
     from repro.models import get_model
+    from repro.obs.slo import request_slo_met
     from repro.serving import Request, ServingEngine
     from repro.serving.backends import fused_kernel_hbm_bytes
 
     cfg = reduced(get_config("samba-coe-expert-7b"))
+    # generous deadlines relative to the tiny sweep's measured latencies
+    # (ttft_p99 ~0.06s, per-token ~10ms): headroom for CI jitter, tight
+    # enough that a structural stall blows them
+    slo_ttft, slo_tpot = 1.0, 0.5
     m = get_model(cfg)
     rng = jax.random.PRNGKey(0)
     n_exp = 3
@@ -529,7 +542,8 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
             now = time.perf_counter() - t0
             while pending and pending[0][0] <= now:
                 off, toks, n_new = pending.pop(0)
-                r = Request(rid=rid, tokens=toks, max_new_tokens=n_new)
+                r = Request(rid=rid, tokens=toks, max_new_tokens=n_new,
+                            slo_ttft_s=slo_ttft, slo_tpot_s=slo_tpot)
                 r.arrival_s = t0 + off   # offered arrival, not submit time:
                 eng.submit(r)            # queueing delay while the engine is
                 rid += 1                 # mid-step must count in latency
@@ -558,11 +572,14 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
                 lat = np.array([r.latency_s for r in done])
                 ttft = np.array([r.first_token_s - r.arrival_s
                                  for r in done])
+                met = [r for r in done if request_slo_met(r)]
                 run = {"wall": wall,
                        "tps": sum(r.max_new_tokens for r in done) / wall,
                        "p50": np.percentile(lat, 50), "p99": np.percentile(lat, 99),
                        "ttft_p50": np.percentile(ttft, 50),
                        "ttft_p99": np.percentile(ttft, 99),
+                       "goodput": sum(r.max_new_tokens for r in met) / wall,
+                       "attain": len(met) / len(done),
                        "occ": eng.stats.mean_occupancy,
                        "switches": eng.stats.switches}
                 key = (sched, lam)
@@ -576,6 +593,8 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
                     b["p99"] = min(b["p99"], run["p99"])
                     b["ttft_p50"] = min(b["ttft_p50"], run["ttft_p50"])
                     b["ttft_p99"] = min(b["ttft_p99"], run["ttft_p99"])
+                    b["goodput"] = max(b["goodput"], run["goodput"])
+                    b["attain"] = max(b["attain"], run["attain"])
                     b["occ"] = max(b["occ"], run["occ"])
                     b["switches"] = min(b["switches"], run["switches"])
     for sched in ("run_to_completion", "continuous"):
@@ -586,6 +605,8 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
                  f"tokens/s={b['tps']:.1f},p50_ms={b['p50']*1e3:.0f},"
                  f"p99_ms={b['p99']*1e3:.0f},"
                  f"ttft_p99_ms={b['ttft_p99']*1e3:.0f},"
+                 f"goodput={b['goodput']:.1f},"
+                 f"slo_attainment={b['attain']:.2f},"
                  f"occupancy={b['occ']:.2f},"
                  f"switches={b['switches']},best_of={repeats}")
     hi = loads[-1]
@@ -626,10 +647,13 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
         eng.stats.reset()
         t0 = time.perf_counter()
         for rid, (toks, n_new) in enumerate(fus_trace):
-            eng.submit(Request(rid=rid, tokens=toks, max_new_tokens=n_new))
+            eng.submit(Request(rid=rid, tokens=toks, max_new_tokens=n_new,
+                               slo_ttft_s=slo_ttft, slo_tpot_s=slo_tpot))
         fdone = eng.drain()
         wall = time.perf_counter() - t0
         tps = sum(r.max_new_tokens for r in fdone) / wall
+        fmet = [r for r in fdone if request_slo_met(r)]
+        fgoodput = sum(r.max_new_tokens for r in fmet) / wall
         outs = {r.rid: r.output for r in fdone}
         digests[bk] = hashlib.sha256(
             b"".join(outs[i].tobytes() for i in sorted(outs))).hexdigest()[:16]
@@ -654,6 +678,8 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
         intensity = pred["flops"] / step_bytes if step_bytes else 0.0
         fus_rows.append({
             "backend": bk, "tokens_per_s": tps, "wall_s": wall,
+            "goodput_tok_s": fgoodput,
+            "slo_attainment": len(fmet) / len(fdone),
             "measured_step_bytes": step_bytes,
             "measured_intensity": intensity,
             "measurement": measurement,
@@ -662,7 +688,9 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
             "flops_per_step": pred["flops"],
             "token_digest": digests[bk]})
         emit(f"sweep_fusion_{bk}", wall * 1e6,
-             f"tokens/s={tps:.1f},measured_MB_per_step={step_bytes/1e6:.2f},"
+             f"tokens/s={tps:.1f},goodput={fgoodput:.1f},"
+             f"slo_attainment={len(fmet) / len(fdone):.2f},"
+             f"measured_MB_per_step={step_bytes/1e6:.2f},"
              f"measured_intensity={intensity:.1f},"
              f"predicted_intensity={pred['predicted_intensity']:.1f}")
     if len(backends) == 2:
@@ -681,6 +709,8 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
                      "p50_s": float(b["p50"]), "p99_s": float(b["p99"]),
                      "ttft_p50_s": float(b["ttft_p50"]),
                      "ttft_p99_s": float(b["ttft_p99"]),
+                     "goodput_tok_s": float(b["goodput"]),
+                     "slo_attainment": float(b["attain"]),
                      "occupancy": b["occ"], "switches": b["switches"],
                      "best_of": repeats})
     metrics = {
@@ -689,6 +719,10 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
         "arrival:continuous:p99_s@burst": best[("continuous", hi)]["p99"],
         "arrival:continuous:ttft_p99_s@burst":
             float(best[("continuous", hi)]["ttft_p99"]),
+        "arrival:continuous:goodput@burst":
+            float(best[("continuous", hi)]["goodput"]),
+        "arrival:continuous:slo_attainment@burst":
+            float(best[("continuous", hi)]["attain"]),
     }
     if "fused" in digests:
         frow = next(r for r in fus_rows if r["backend"] == "fused")
@@ -705,6 +739,7 @@ def bench_sweep_arrival(tiny: bool = False, backend: str = "both"):
            "config": {"arch": "samba-coe-expert-7b(reduced)",
                       "n_requests": n_req, "repeats": repeats,
                       "loads": ["inf" if np.isinf(l) else l for l in loads],
+                      "slo": {"ttft_s": slo_ttft, "tpot_s": slo_tpot},
                       "tiny": tiny, "backend_axis": backends},
            "rows": rows,
            "fusion_axis": {"dtype": "float32", "n_requests": n_freq,
@@ -1280,26 +1315,35 @@ def main(argv=None) -> None:
     any_sweep = (args.sweep_arrival or args.sweep_switching
                  or args.sweep_node or args.sweep_prefill
                  or args.sweep_tenancy)
-    if any_sweep:
-        if args.sweep_arrival:
-            bench_sweep_arrival(tiny=args.tiny, backend=args.backend)
-        if args.sweep_switching:
-            bench_sweep_switching(tiny=args.tiny)
-        if args.sweep_node:
-            bench_sweep_node(tiny=args.tiny)
-        if args.sweep_prefill:
-            bench_sweep_prefill(tiny=args.tiny)
-        if args.sweep_tenancy:
-            bench_sweep_tenancy(tiny=args.tiny)
-    else:
-        for name, fn in benches.items():
-            if args.only:
-                if args.only != name:
-                    continue
-            elif name in ("sweep", "sweep_switching", "sweep_node",
-                          "sweep_prefill", "sweep_tenancy"):
-                continue          # heavy: opt-in via --sweep-* flags
-            fn()
+    try:
+        if any_sweep:
+            if args.sweep_arrival:
+                bench_sweep_arrival(tiny=args.tiny, backend=args.backend)
+            if args.sweep_switching:
+                bench_sweep_switching(tiny=args.tiny)
+            if args.sweep_node:
+                bench_sweep_node(tiny=args.tiny)
+            if args.sweep_prefill:
+                bench_sweep_prefill(tiny=args.tiny)
+            if args.sweep_tenancy:
+                bench_sweep_tenancy(tiny=args.tiny)
+        else:
+            for name, fn in benches.items():
+                if args.only:
+                    if args.only != name:
+                        continue
+                elif name in ("sweep", "sweep_switching", "sweep_node",
+                              "sweep_prefill", "sweep_tenancy"):
+                    continue          # heavy: opt-in via --sweep-* flags
+                fn()
+    except BaseException:
+        # postmortem for the CI artifact: the flight recorder saw every
+        # admit/switch/evict right up to the failure
+        from repro.obs import flightrec, get_registry
+        out = flightrec.dump(_results_dir() / "flight_bench.json",
+                             get_registry(), reason="bench_failure")
+        print(f"bench failed — flight-recorder bundle -> {out}")
+        raise
     if args.trace_out is not None:
         obs_trace.disable()
         out = (args.trace_out if args.trace_out != "__default__"

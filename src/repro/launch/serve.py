@@ -14,13 +14,63 @@ a ``--tagged-fraction`` of them arrive caller-tagged and keep their tag.
 (``repro.node``): TP x G socket groups emulated on CPU devices, e.g.
 
     python -m repro.launch.serve --node-shape 2x4 --reduced
+
+Lifecycle plane (``repro.obs``): ``--metrics-port`` additionally mounts
+``/readyz`` (503 until ``warmup()`` completes) and ``/debug/*`` snapshots;
+``--watchdog`` starts the background invariant sampler; ``SIGUSR2`` (or a
+watchdog anomaly) dumps the flight recorder's postmortem bundle to
+``--flight-out``.
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import numpy as np
+
+
+def install_flight_dump_signal(path, registry=None, signum=None):
+    """Install a signal handler (default ``SIGUSR2``) that dumps the process
+    flight recorder's postmortem bundle to ``path``. Returns the signal
+    number installed, or ``None`` on platforms without SIGUSR2. Tests drive
+    it in-process via ``signal.raise_signal``."""
+    from repro.obs import flightrec, get_registry
+
+    if signum is None:
+        signum = getattr(signal, "SIGUSR2", None)
+        if signum is None:                 # e.g. Windows
+            return None
+    reg = registry if registry is not None else get_registry()
+
+    def _dump(_sig, _frame):
+        out = flightrec.dump(path, reg, reason="signal")
+        print(f"flight recorder: postmortem bundle -> {out}")
+
+    signal.signal(signum, _dump)
+    return signum
+
+
+def _wire_obs(args, server, ready, providers, engines):
+    """Hook one serve target into the lifecycle plane: mount its debug
+    snapshots on the httpd and the flight recorder, flip ``/readyz`` to the
+    target's warmed state, and (``--watchdog``) start the invariant
+    sampler. Returns the watchdog (or None)."""
+    from repro.obs import Watchdog, flightrec
+
+    for name, fn in providers.items():
+        flightrec.add_state_provider(name, fn)
+        if server is not None:
+            server.add_debug(name, fn)
+    if ready is not None:
+        ready["fn"] = lambda: all(getattr(e, "warmed", False)
+                                  for e in engines)
+    if not args.watchdog:
+        return None
+    wd = Watchdog(engines, interval_s=args.watchdog_interval,
+                  dump_path=args.flight_out)
+    wd.start()
+    return wd
 
 
 def build_coe(cfg, n_experts: int, hbm_experts: float, seed: int = 0,
@@ -88,7 +138,7 @@ def _make_requests(args, cfg, expert_names):
     return reqs, n_tagged
 
 
-def _serve_single(args, cfg):
+def _serve_single(args, cfg, server=None, ready=None):
     from repro.obs import get_registry
     from repro.serving import ServingEngine
 
@@ -104,6 +154,9 @@ def _serve_single(args, cfg):
                            prefill_mode=args.prefill_mode,
                            prefix_sharing=args.prefix_sharing,
                            registry=get_registry())
+    wd = _wire_obs(args, server, ready, engine.debug_providers(), [engine])
+    if args.warmup:
+        engine.warmup()
     reqs, n_tagged = _make_requests(args, cfg, coe.expert_names())
     t0 = time.perf_counter()
     for r in reqs:
@@ -130,10 +183,15 @@ def _serve_single(args, cfg):
     print(f"tier ledger: overlap={coe.cache.ledger.overlap_ratio:.2f} "
           f"store_read={coe.cache.ledger.bytes_moved('store_read')}B "
           f"h2d={coe.cache.ledger.bytes_moved('h2d')}B")
+    if engine.slo.tenants():
+        print(f"slo: attainment={engine.slo.attainment():.3f} "
+              f"goodput={engine.slo.goodput():.1f} tok/s")
+    if wd is not None:
+        wd.stop()
     return engine
 
 
-def _serve_node(args, cfg):
+def _serve_node(args, cfg, server=None, ready=None):
     from repro.core import HashRouter
     from repro.node import make_node_topology, RDUNode
     from repro.obs import get_registry
@@ -155,6 +213,10 @@ def _serve_node(args, cfg):
     for name, host, domain in hosts:
         node.register_expert(name, host, domain=domain)
     placement = node.plan()
+    wd = _wire_obs(args, server, ready, node.debug_providers(),
+                   node.engines())
+    if args.warmup:
+        node.warmup()
     reqs, n_tagged = _make_requests(args, cfg, node.expert_names())
     t0 = time.perf_counter()
     for r in reqs:
@@ -173,6 +235,8 @@ def _serve_node(args, cfg):
               f"{g['tokens_out']} tok, occupancy {g['occupancy']:.2f}, "
               f"{g['switches']} switches, cache h/m "
               f"{g['cache_hits']}/{g['cache_misses']}")
+    if wd is not None:
+        wd.stop()
     node.close()
     return node
 
@@ -231,6 +295,20 @@ def main(argv=None):
                     help="record request-lifecycle spans and export a "
                     "Chrome-trace / Perfetto JSON to PATH on exit "
                     "(open at https://ui.perfetto.dev)")
+    ap.add_argument("--flight-out", default="flight_dump.json",
+                    metavar="PATH",
+                    help="where SIGUSR2 (and watchdog anomalies) dump the "
+                    "flight recorder's postmortem bundle")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="start the background invariant sampler "
+                    "(obs.watchdog): stuck requests, KV refcount leaks, "
+                    "HBM budget, queue age -> obs.anomaly{kind=} + a "
+                    "postmortem dump to --flight-out")
+    ap.add_argument("--watchdog-interval", type=float, default=1.0,
+                    metavar="S", help="watchdog sampling interval")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the serving hot path before traffic "
+                    "(flips /readyz from 503 to 200 on completion)")
     args = ap.parse_args(argv)
 
     if args.node_shape:
@@ -242,11 +320,17 @@ def main(argv=None):
     from repro.configs import get_config, pad_for_tp, reduced
     from repro.obs import get_registry, serve_metrics, trace
 
+    install_flight_dump_signal(args.flight_out)
+
+    # the engine/node is built after the httpd starts; /readyz reads the
+    # warmed state through this mutable slot once _wire_obs fills it in
+    ready = {"fn": lambda: False}
     server = None
     if args.metrics_port is not None:
-        server = serve_metrics(get_registry(), port=args.metrics_port)
+        server = serve_metrics(get_registry(), port=args.metrics_port,
+                               ready_check=lambda: ready["fn"]())
         print(f"metrics: {server.url}/metrics "
-              f"(+ /metrics.json, /healthz)")
+              f"(+ /metrics.json, /healthz, /readyz, /debug/*)")
     if args.trace_out:
         trace.enable()
 
@@ -256,8 +340,8 @@ def main(argv=None):
     try:
         if args.node_shape:
             cfg = pad_for_tp(cfg, int(args.node_shape.split("x")[0]))
-            return _serve_node(args, cfg)
-        return _serve_single(args, cfg)
+            return _serve_node(args, cfg, server, ready)
+        return _serve_single(args, cfg, server, ready)
     finally:
         if args.trace_out:
             trace.disable()

@@ -316,6 +316,34 @@ class RDUNode:
         for gs in self.groups:
             gs.engine.warmup(expert)
 
+    @property
+    def warmed(self) -> bool:
+        """True once every decode engine finished ``warmup()`` — the node's
+        ``/readyz`` signal."""
+        return all(gs.engine.warmed for gs in self.groups)
+
+    def engines(self) -> List[Any]:
+        """The decode engines, for the obs watchdog."""
+        return [gs.engine for gs in self.groups]
+
+    def debug_placement(self) -> Dict[str, Any]:
+        """Current expert->group placement (``/debug/placement``)."""
+        if self.placement is None:
+            return {"planned": False, "groups": len(self.groups)}
+        return {"planned": True, "groups": len(self.groups),
+                "resident": {name: list(gids) for name, gids in
+                             self.placement.resident.items()}}
+
+    def debug_providers(self) -> Dict[str, Any]:
+        """Node-wide debug snapshot map: ``placement`` plus every group's
+        engine providers namespaced ``g<gid>.<name>`` (multi-group nodes
+        keep one httpd)."""
+        provs: Dict[str, Any] = {"placement": self.debug_placement}
+        for gs in self.groups:
+            for name, fn in gs.engine.debug_providers().items():
+                provs[f"g{gs.group.gid}.{name}"] = fn
+        return provs
+
     # -- accounting -------------------------------------------------------
     def hbm_within_budget(self) -> bool:
         """Every group's weight cache and KV pool inside its HBM shares

@@ -7,7 +7,12 @@ records a point event (placement decisions, request admission);
 scheduler steps (they need not nest and may even end on another thread).
 Buffers are per-thread so the switching cache's prefetch workers and the
 engine's caller thread never contend on a lock in the record path; ring
-semantics bound memory on long runs (oldest events drop first).
+semantics bound memory on long runs (oldest events drop first). Drops are
+COUNTED per ring — ``Tracer.dropped_events`` totals them, the default
+registry exposes them as the ``trace.dropped_events`` gauge
+(``register_metrics``), and every Chrome-trace export stamps the total
+into its ``metadata`` so a truncated timeline is never mistaken for a
+complete one.
 
 Tracing is OFF by default and the disabled path is allocation-free:
 ``span()`` returns a module-level no-op singleton, so the engine can leave
@@ -79,6 +84,28 @@ class _NoopSpan:
 NOOP_SPAN = _NoopSpan()
 
 
+class _Ring:
+    """One thread's event ring. Only the owning thread appends, so the
+    bounded-append drop count needs no lock; readers snapshot under the
+    tracer lock like before."""
+
+    __slots__ = ("events", "maxlen", "dropped")
+
+    def __init__(self, maxlen: int):
+        self.events: deque = deque(maxlen=maxlen)
+        self.maxlen = maxlen
+        self.dropped = 0
+
+    def append(self, ev: Dict[str, Any]):
+        if len(self.events) == self.maxlen:
+            self.dropped += 1            # deque(maxlen) evicts the oldest
+        self.events.append(ev)
+
+    def clear(self):
+        self.events.clear()
+        self.dropped = 0
+
+
 class Tracer:
     """Per-thread ring buffers of Chrome trace events."""
 
@@ -99,11 +126,11 @@ class Tracer:
     def _us(self, t: float) -> float:
         return (t - self._epoch) * 1e6
 
-    def _ring(self) -> deque:
+    def _ring(self) -> _Ring:
         ring = getattr(self._local, "ring", None)
         if ring is None:
             tid = threading.get_ident()
-            ring = deque(maxlen=self.buffer_size)
+            ring = _Ring(self.buffer_size)
             with self._lock:
                 self._rings.append((tid, ring))
                 self._thread_names[tid] = threading.current_thread().name
@@ -159,6 +186,14 @@ class Tracer:
             r.clear()
         self._epoch = time.perf_counter()
 
+    @property
+    def dropped_events(self) -> int:
+        """Events lost to ring overflow across all threads (since the last
+        ``clear``)."""
+        with self._lock:
+            rings = list(self._rings)
+        return sum(r.dropped for _, r in rings)
+
     # -- export --------------------------------------------------------
     def events(self) -> List[Dict[str, Any]]:
         """All recorded events, oldest first across threads."""
@@ -166,7 +201,7 @@ class Tracer:
             rings = list(self._rings)
         evs: List[Dict[str, Any]] = []
         for _, ring in rings:
-            evs.extend(list(ring))
+            evs.extend(list(ring.events))
         evs.sort(key=lambda e: e.get("ts", 0.0))
         return evs
 
@@ -177,7 +212,10 @@ class Tracer:
         meta = [{"name": "thread_name", "ph": "M", "pid": self._pid,
                  "tid": tid, "args": {"name": tname}}
                 for tid, tname in sorted(names.items())]
-        return {"traceEvents": meta + evs, "displayTimeUnit": "ms"}
+        # Perfetto ignores unknown top-level keys; readers of the exported
+        # document can tell a truncated timeline from a complete one
+        return {"traceEvents": meta + evs, "displayTimeUnit": "ms",
+                "metadata": {"trace.dropped_events": self.dropped_events}}
 
     def export(self, path) -> Path:
         path = Path(path)
@@ -239,6 +277,19 @@ def export(path) -> Path:
 
 def events() -> List[Dict[str, Any]]:
     return _tracer.events()
+
+
+def dropped_events() -> int:
+    return _tracer.dropped_events
+
+
+def register_metrics(registry) -> None:
+    """Expose the default tracer's overflow count as the
+    ``trace.dropped_events`` gauge on ``registry`` (reads through
+    ``set_tracer`` swaps). Idempotent — re-registering returns the same
+    series."""
+    registry.derived_gauge("trace.dropped_events",
+                           lambda: float(_tracer.dropped_events))
 
 
 def validate_chrome_trace(doc: Dict[str, Any]) -> List[str]:

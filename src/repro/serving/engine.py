@@ -41,8 +41,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.coe import CompositionOfExperts
-from repro.obs import trace
+from repro.obs import flightrec, trace
+from repro.obs.lifecycle import LifecycleTracker
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOTracker
 from repro.obs.stats import StatsView, counter_field
 from repro.serving.kvcache import PagedKVCache, PrefixIndex
 from repro.serving.prefill import (PackedPrefillRunner, PrefillHandoff,
@@ -74,9 +76,20 @@ class Request:
     tenant: str = "default"
     priority: int = 0
     slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None  # mean inter-token deadline (obs.slo)
     on_token: Optional[Callable[["Request", int], None]] = None
     on_done: Optional[Callable[["Request"], None]] = None
     prefix_hit_tokens: int = 0          # prompt tokens adopted, not prefilled
+    # lifecycle-plane stamps/attribution (obs.lifecycle): the engine stamps
+    # submit_s/admit_s/last_token_s; route_s is the router forward's cost;
+    # switch_stall_s is activation time this request's admission paid;
+    # preemptions counts frontend pull-backs from the engine queue
+    submit_s: Optional[float] = None
+    admit_s: Optional[float] = None
+    last_token_s: Optional[float] = None
+    route_s: float = 0.0
+    switch_stall_s: float = 0.0
+    preemptions: int = 0
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -449,9 +462,20 @@ class ServingEngine:
             self.sessions = None
             self.prefix_index = None
         # TTFT (arrival -> first token) was stored per request but never
-        # aggregated; it now lands in a P2 streaming histogram
+        # aggregated; it now lands in a P2 streaming histogram. TPOT (mean
+        # inter-token seconds after the first token) is the decode-side
+        # half of the SLO pair and gets its own histogram.
         self._ttft_hist = self._registry.histogram("serve.ttft_s",
                                                    labels=self._obs_labels)
+        self._tpot_hist = self._registry.histogram("serve.tpot_s",
+                                                   labels=self._obs_labels)
+        # request-lifecycle plane: per-request phase ledger + SLO/goodput
+        # accounting, both fed at _finish (obs.lifecycle / obs.slo)
+        self.lifecycle = LifecycleTracker(self._registry,
+                                          labels=self._obs_labels)
+        self.slo = SLOTracker(self._registry, labels=self._obs_labels)
+        # /readyz readiness: False until warmup() AOT-compiled the hot path
+        self.warmed = False
         # info-style gauge: which decode backend this engine executes
         self._registry.gauge("serve.backend", labels={
             **self._obs_labels,
@@ -472,6 +496,8 @@ class ServingEngine:
         through the composition's router once, at arrival (§II); a request
         already tagged by an upstream router (e.g. the node scheduler) keeps
         its tag — routing happens exactly once either way."""
+        if req.submit_s is None:         # keep the first stamp on re-submits
+            req.submit_s = time.perf_counter()
         S = len(req.tokens)
         need = S + req.max_new_tokens + self.policy.reserve_slack
         if need > self.max_blocks * self.block:
@@ -486,6 +512,7 @@ class ServingEngine:
                 req.expert, dt = self.coe.route_request(req.tokens)
                 sp.add(expert=req.expert)
             self.stats.route_s += dt
+            req.route_s = dt
         elif req.expert not in self.coe.experts:
             raise KeyError(
                 f"request {req.rid}: unknown expert {req.expert!r}")
@@ -577,6 +604,7 @@ class ServingEngine:
                         active, toks)
                     self.pool.k, self.pool.v = pk, pv
                     logits.block_until_ready()
+        self.warmed = True               # /readyz flips to 200
 
     # -- scheduling internals --------------------------------------------
     def _blocks_for(self, req: Request) -> int:
@@ -645,7 +673,10 @@ class ServingEngine:
         with trace.span("switch", cat="engine", expert=name,
                         prev=self._active_expert):
             self._params = self.coe.cache.activate(name)
-        self.stats.switch_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.switch_s += dt
+        flightrec.record("switch", expert=name, prev=self._active_expert,
+                         stall_s=dt, **self._obs_labels)
         if self._active_expert is not None:
             self.stats.switches += 1
         self._active_expert = name
@@ -696,7 +727,9 @@ class ServingEngine:
                                 and self._active_expert is not None):
                             self._params = self.coe.cache.activate(
                                 self._active_expert)
-                        self.stats.switch_s += time.perf_counter() - t0
+                        dt = time.perf_counter() - t0
+                        self.stats.switch_s += dt
+                        r.switch_stall_s += dt
                         self._prefill_suffix([(r, m[0], m[1])], params,
                                              free, done)
                     else:
@@ -731,8 +764,11 @@ class ServingEngine:
 
     def _prefill_into_slot(self, slot_idx: int, req: Request,
                            done: List[Request]):
+        req.admit_s = time.perf_counter()
         trace.instant("admit", cat="engine", request_id=req.rid,
                       expert=req.expert, slot=slot_idx)
+        flightrec.record("admit", rid=req.rid, expert=req.expert,
+                         slot=slot_idx, **self._obs_labels)
         t0 = time.perf_counter()
         params = self.coe.cache.activate(req.expert)
         if (req.expert != self._active_expert
@@ -741,7 +777,9 @@ class ServingEngine:
             # expert; re-activate so residency, LRU order and the hit/miss
             # stats keep describing what is actually executing
             self._params = self.coe.cache.activate(self._active_expert)
-        self.stats.switch_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats.switch_s += dt
+        req.switch_stall_s += dt
         t0 = time.perf_counter()
         S = len(req.tokens)
         with trace.span("prefill", cat="engine", request_id=req.rid,
@@ -770,6 +808,10 @@ class ServingEngine:
         handed-off state first (no forward needed), then group the rest by
         expert (selection order preserved — starving before active) and run
         one packed call per bucket-capacity chunk."""
+        now = time.perf_counter()
+        for r in reqs:
+            if r.admit_s is None:
+                r.admit_s = now
         todo: List[Request] = []
         for r in reqs:
             if r.handoff is not None:
@@ -784,7 +826,10 @@ class ServingEngine:
         for expert, rs in groups.items():
             t0 = time.perf_counter()
             params = self.coe.cache.activate(expert)
-            self.stats.switch_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.switch_s += dt
+            for r in rs:                 # activation stall split pro rata
+                r.switch_stall_s += dt / len(rs)
             if expert != self._active_expert:
                 foreign = True
             # prefix hits prefill only their un-shared suffix (one extend
@@ -819,6 +864,8 @@ class ServingEngine:
         for r in reqs:
             trace.instant("admit", cat="engine", request_id=r.rid,
                           expert=r.expert, slot=-1)
+            flightrec.record("admit", rid=r.rid, expert=r.expert,
+                             packed=len(reqs), **self._obs_labels)
         t0 = time.perf_counter()
         with trace.span("prefill", cat="engine",
                         request_ids=",".join(str(r.rid) for r in reqs),
@@ -876,6 +923,10 @@ class ServingEngine:
         t0 = time.perf_counter()
         lanes: List[Tuple[Request, int, int]] = []
         for req, blocks, n in items:
+            if req.admit_s is None:
+                req.admit_s = t0
+            flightrec.record("admit", rid=req.rid, expert=req.expert,
+                             prefix_hit=n, **self._obs_labels)
             self.pool.open(req.rid, adopt=blocks, adopt_len=n)
             self.pool.unpin(blocks)
             si = len(req.tokens) - n
@@ -927,6 +978,11 @@ class ServingEngine:
                       expert=req.expert, slot=slot_idx, handoff=1)
         h = req.handoff
         t0 = time.perf_counter()
+        if req.admit_s is None:
+            req.admit_s = t0
+        flightrec.record("handoff", rid=req.rid, expert=req.expert,
+                         slot=slot_idx, kv_bytes=h.nbytes(),
+                         **self._obs_labels)
         with trace.span("adopt_handoff", cat="engine", request_id=req.rid,
                         expert=req.expert, prompt_tokens=len(req.tokens),
                         kv_bytes=h.nbytes()):
@@ -943,11 +999,14 @@ class ServingEngine:
         """Shared admission tail: timestamps, TTFT histogram, slot seating,
         policy callback, immediate finish for max_new_tokens == 1."""
         now = time.perf_counter()
+        if req.admit_s is None:              # paths that bypassed _admit
+            req.admit_s = now
         if req.prefill_done_s is None:       # handoffs carry their own stamp
             req.prefill_done_s = now
         if req.first_token_s is None:
             req.first_token_s = now
             self._ttft_hist.observe(req.first_token_s - req.arrival_s)
+        req.last_token_s = now               # watchdog stall baseline
         self.stats.admitted += 1
         self.stats.tokens_out += 1
         if req.on_token is not None:
@@ -1019,6 +1078,7 @@ class ServingEngine:
         with trace.span("decode", cat="engine", expert=self._active_expert,
                         active_slots=int(active.sum())):
             emits = self.policy.round(self._params, active)
+        now = time.perf_counter()
         for i, toks in emits.items():
             slot = self.slots[i]
             n = len(toks)
@@ -1027,6 +1087,7 @@ class ServingEngine:
             self.pool.advance(slot.req.rid, n)
             slot.generated.extend(toks)
             slot.last_token = toks[-1]
+            slot.req.last_token_s = now
             self.stats.tokens_out += n
             if slot.req.on_token is not None:
                 for t in toks:
@@ -1043,6 +1104,7 @@ class ServingEngine:
         req.output = np.asarray(slot.generated[: req.max_new_tokens],
                                 np.int32)
         req.done_s = time.perf_counter()
+        req.last_token_s = req.done_s
         if self.prefix_sharing:
             # the pool holds KV for every *committed* position (the final
             # emitted token's KV was never written — decode stopped first),
@@ -1066,6 +1128,13 @@ class ServingEngine:
         trace.async_end("request", id=req.rid, cat="engine",
                         tokens_out=len(req.output),
                         latency_s=req.latency_s)
+        if len(req.output) > 1 and req.first_token_s is not None:
+            self._tpot_hist.observe((req.done_s - req.first_token_s)
+                                    / (len(req.output) - 1))
+        self.lifecycle.complete(req)
+        self.slo.observe(req)
+        flightrec.record("done", rid=req.rid, expert=req.expert,
+                         tokens_out=len(req.output), **self._obs_labels)
         done.append(req)
 
     # -- tenancy accounting ----------------------------------------------
@@ -1094,3 +1163,58 @@ class ServingEngine:
             return (cache.used_bytes + self.pool.bytes_in_use()
                     <= b.total_bytes)
         return True
+
+    # -- debug snapshots (/debug/* endpoints, flight-recorder state) -------
+    def debug_slots(self) -> Dict[str, Any]:
+        """Live decode-slot table: what every slot is doing right now."""
+        now = time.perf_counter()
+        slots = []
+        for idx, s in enumerate(self.slots):
+            if s is None:
+                slots.append({"slot": idx, "state": "free"})
+                continue
+            r = s.req
+            last = r.last_token_s or r.first_token_s or r.arrival_s
+            slots.append({
+                "slot": idx, "state": "decoding", "rid": r.rid,
+                "expert": s.expert, "tenant": r.tenant,
+                "generated": len(s.generated), "remaining": s.remaining,
+                "since_last_token_s": now - last,
+                "admitted_step": s.admitted_step})
+        return {"active_expert": self._active_expert,
+                "queue_depth": len(self.queue),
+                "queued_rids": [r.rid for r in self.queue],
+                "slots": slots}
+
+    def debug_pool(self) -> Dict[str, Any]:
+        """KV pool books: occupancy, refcounts, and the invariant audit."""
+        p = self.pool
+        return {"n_blocks": p.n_blocks, "block_size": p.block,
+                "free_blocks": p.free_blocks,
+                "blocks_in_use": p.stats.blocks_in_use,
+                "shared_blocks": p.stats.shared_blocks,
+                "bytes_in_use": p.bytes_in_use(),
+                "capacity_bytes": p.capacity_bytes(),
+                "open_rids": list(p.open_rids()),
+                "reclaimable_blocks": p.reclaimable_blocks(),
+                "invariant_violations": p.check_invariants()}
+
+    def debug_sessions(self) -> Dict[str, Any]:
+        """Retained-session table (empty when sessions are disabled)."""
+        if self.sessions is None:
+            return {"sessions": [], "bytes_retained": 0}
+        sm = self.sessions
+        return {"bytes_retained": sm.bytes_retained(),
+                "max_bytes": sm.max_bytes,
+                "evictions": sm.evictions,
+                "sessions": [
+                    {"sid": sid, "rid": s.rid, "expert": s.expert,
+                     "tokens": int(len(s.tokens)), "last_use": s.last_use}
+                    for sid, s in sm._sessions.items()]}
+
+    def debug_providers(self) -> Dict[str, Any]:
+        """Name -> zero-arg snapshot fn; serve.py mounts these on the
+        metrics httpd (``/debug/<name>``) and registers them as flight-
+        recorder state providers."""
+        return {"slots": self.debug_slots, "pool": self.debug_pool,
+                "sessions": self.debug_sessions}

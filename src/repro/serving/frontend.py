@@ -38,6 +38,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import flightrec
 from repro.serving.engine import Request, ServingEngine
 
 _DONE = object()                         # TokenStream end-of-stream sentinel
@@ -161,7 +162,8 @@ class StreamingFrontend:
     def submit(self, tokens, max_new_tokens: int, *,
                tenant: str = "default", session_id: Optional[str] = None,
                priority: int = 0,
-               slo_ttft_s: Optional[float] = None) -> TokenStream:
+               slo_ttft_s: Optional[float] = None,
+               slo_tpot_s: Optional[float] = None) -> TokenStream:
         """Admit one request (quota check now, engine later) and return its
         token stream. Raises ``QuotaExceeded`` instead of queueing when the
         tenant is over its limits."""
@@ -178,7 +180,8 @@ class StreamingFrontend:
                           tokens=np.asarray(tokens, np.int32),
                           max_new_tokens=max_new_tokens,
                           session_id=session_id, tenant=tenant,
-                          priority=priority, slo_ttft_s=slo_ttft_s)
+                          priority=priority, slo_ttft_s=slo_ttft_s,
+                          slo_tpot_s=slo_tpot_s)
             stream = TokenStream(req)
             req.on_token = lambda r, t: (stream._put(t),
                                          self._m_streamed.inc())
@@ -251,6 +254,9 @@ class StreamingFrontend:
         if victim.priority >= cand.req.priority:
             return False
         q.remove(victim)
+        victim.preemptions += 1          # lifecycle-plane attribution
+        flightrec.record("preempt", rid=victim.rid, tenant=victim.tenant,
+                         priority=victim.priority, by=cand.req.rid)
         heapq.heappush(self._heap, _Pending(
             (-victim.priority,
              victim.arrival_s + (victim.slo_ttft_s
@@ -292,7 +298,8 @@ class StreamingFrontend:
                 tenant=msg.get("tenant", "default"),
                 session_id=msg.get("session_id"),
                 priority=int(msg.get("priority", 0)),
-                slo_ttft_s=msg.get("slo_ttft_s"))
+                slo_ttft_s=msg.get("slo_ttft_s"),
+                slo_tpot_s=msg.get("slo_tpot_s"))
         except QuotaExceeded as e:
             writer.write(json.dumps({"error": str(e)}).encode() + b"\n")
             await writer.drain()

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import flightrec
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.stats import StatsView, counter_field, gauge_field
 
@@ -171,6 +172,33 @@ class PagedKVCache:
     def open_rids(self) -> Tuple[int, ...]:
         return tuple(self._tables)
 
+    def check_invariants(self) -> List[str]:
+        """Audit the refcount books; returns violations (empty = healthy).
+        The watchdog samples this: a leaked block (popped off the free list
+        without a reference), a stats drift, or a table referencing more
+        blocks than the refcounts cover all surface here."""
+        problems: List[str] = []
+        if len(self._refs) + len(self._free) != self.n_blocks:
+            problems.append(
+                f"partition broken: {len(self._refs)} refcounted + "
+                f"{len(self._free)} free != {self.n_blocks} blocks")
+        if self.stats.blocks_in_use != len(self._refs):
+            problems.append(
+                f"stats drift: blocks_in_use={self.stats.blocks_in_use} "
+                f"!= {len(self._refs)} refcounted blocks")
+        refsum = sum(self._refs.values())
+        live = self.live_table_refs()
+        if refsum < live:
+            problems.append(
+                f"refcount sum {refsum} < {live} live table references")
+        bad = [b for b in self._refs if not 0 <= b < self.n_blocks]
+        if bad:
+            problems.append(f"refcounted blocks outside pool: {bad}")
+        nonpos = [b for b, r in self._refs.items() if r <= 0]
+        if nonpos:
+            problems.append(f"non-positive refcounts on blocks: {nonpos}")
+        return problems
+
     # -- reclaim (KV pages vs sessions/index competing for the pool) -------
     def add_reclaimer(self, reclaimer: Any) -> None:
         """Register an object holding blocks speculatively. Must expose
@@ -190,14 +218,19 @@ class PagedKVCache:
         """Ask reclaimers for blocks until the free list covers ``need``.
         Loops while anybody makes progress: evicting a leaf prefix entry can
         expose its parent as the next victim."""
+        before = len(self._free)
         while len(self._free) < need:
             progress = 0
             for r in self._reclaimers:
                 if len(self._free) >= need:
-                    return
+                    break
                 progress += int(r.reclaim(need - len(self._free)))
             if progress == 0:
-                return
+                break
+        if len(self._free) != before:
+            flightrec.record("reclaim", need=need,
+                             freed=len(self._free) - before,
+                             free_blocks=len(self._free))
 
     # -- refcounting -------------------------------------------------------
     def _alloc_block(self) -> int:

@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import flightrec
 from repro.serving.kvcache import PagedKVCache
 
 
@@ -126,7 +127,10 @@ class SessionManager:
         before = self.pool.free_blocks
         self.pool.free(s.rid)
         self.evictions += 1
-        return self.pool.free_blocks - before
+        freed = self.pool.free_blocks - before
+        flightrec.record("evict", sid=sid, rid=s.rid, expert=s.expert,
+                         cause=cause, freed_blocks=freed)
+        return freed
 
     def _victim(self) -> Optional[str]:
         """Highest age-per-byte session: old AND cheap-to-rebuild goes

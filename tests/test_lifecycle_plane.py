@@ -1,0 +1,482 @@
+"""Request-lifecycle plane (ISSUE 10): phase ledger, SLO/goodput, watchdog,
+flight recorder.
+
+Covers: the telescoping phase decomposition (sum of phases == wall time,
+exactly), hand-computed SLO attainment / goodput / burn-rate math, the
+watchdog's fault-injection checks (stuck request, leaked KV block — and
+silence on a clean drain), flight-recorder ring overflow + postmortem
+bundle schema round-trip, trace-ring drop accounting, the ``/readyz`` and
+``/debug/*`` HTTP endpoints, the SIGUSR2 dump handler naming the stuck
+slot, and ``check_bench --update-baseline``.
+"""
+import json
+import signal
+import subprocess
+import sys
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import CompositionOfExperts, ExpertHandle, HashRouter
+from repro.models import get_model
+from repro.obs import flightrec, trace
+from repro.obs.flightrec import FlightRecorder, validate_bundle
+from repro.obs.httpd import serve_metrics
+from repro.obs.lifecycle import PHASES, phase_record
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOTracker, request_slo_met
+from repro.obs.trace import Tracer
+from repro.obs.watchdog import Watchdog, WatchdogError
+from repro.serving import Request, ServingEngine
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_config("samba-coe-expert-7b"))
+
+
+def _mk_engine(cfg, n_experts=2, **kw):
+    m = get_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    experts = [jax.tree.map(np.asarray, m.init(jax.random.fold_in(rng, i)))
+               for i in range(n_experts)]
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(experts[0]))
+    coe = CompositionOfExperts(HashRouter(n_experts), None,
+                               int(2.5 * nbytes))
+    for i, h in enumerate(experts):
+        coe.register(ExpertHandle(f"e{i}", cfg, h))
+    return ServingEngine(coe, cfg, max_len=32, n_slots=2, block_size=8, **kw)
+
+
+def _mk_requests(cfg, n, new_tokens=4):
+    rs = np.random.RandomState(0)
+    return [Request(rid=i,
+                    tokens=rs.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+# ----------------------------------------------------------------------
+# phase ledger
+# ----------------------------------------------------------------------
+def test_phase_record_hand_computed():
+    r = Request(rid=7, tokens=np.zeros(4, np.int32), max_new_tokens=5,
+                tenant="acme", priority=2)
+    r.arrival_s, r.submit_s, r.admit_s = 10.0, 10.5, 11.0
+    r.route_s = 0.1
+    r.first_token_s, r.done_s = 11.4, 12.4
+    r.output = np.arange(5, dtype=np.int32)
+    rec = phase_record(r)
+    ph = rec["phases"]
+    assert ph["queue_wait"] == pytest.approx(0.5)
+    assert ph["route"] == pytest.approx(0.1)
+    assert ph["admit_wait"] == pytest.approx(0.4)
+    assert ph["prefill"] == pytest.approx(0.4)
+    assert ph["decode"] == pytest.approx(1.0)
+    assert rec["wall_s"] == pytest.approx(2.4)
+    assert rec["ttft_s"] == pytest.approx(1.4)
+    assert rec["tpot_s"] == pytest.approx(1.0 / 4)
+    assert rec["tenant"] == "acme" and rec["priority"] == 2
+
+
+def test_phase_decomposition_sums_to_wall(cfg):
+    reg = MetricsRegistry()
+    eng = _mk_engine(cfg, registry=reg)
+    for r in _mk_requests(cfg, 5):
+        eng.submit(r)
+    done = eng.drain()
+    assert len(done) == 5
+    recs = eng.lifecycle.records()
+    assert len(recs) == 5
+    for rec in recs:
+        total = sum(rec["phases"][p] for p in PHASES)
+        # telescoping identity: exact up to float rounding
+        assert total == pytest.approx(rec["wall_s"], abs=1e-9)
+        for p in PHASES:
+            assert rec["phases"][p] >= -1e-9, (p, rec["phases"][p])
+    # phases landed in the labeled histograms and tpot_s got observed
+    snap = reg.snapshot()
+    assert snap["serve.phase_seconds:count{phase=decode}"] == 5
+    assert snap["serve.phase_seconds:count{phase=queue_wait}"] == 5
+    assert snap["serve.tpot_s:count"] == 5          # 4 new tokens each
+    assert snap["serve.ttft_s:count"] == 5
+
+
+# ----------------------------------------------------------------------
+# SLO attainment / goodput / burn rate
+# ----------------------------------------------------------------------
+def _finished(rid, *, tenant="a", ttft=0.1, tpot=0.01, n_out=5,
+              slo_ttft=None, slo_tpot=None):
+    r = Request(rid=rid, tokens=np.zeros(4, np.int32), max_new_tokens=n_out,
+                tenant=tenant, slo_ttft_s=slo_ttft, slo_tpot_s=slo_tpot)
+    r.arrival_s = 0.0
+    r.first_token_s = ttft
+    r.done_s = ttft + tpot * (n_out - 1)
+    r.output = np.arange(n_out, dtype=np.int32)
+    return r
+
+
+def test_slo_goodput_hand_computed():
+    reg = MetricsRegistry()
+    t = {"now": 100.0}
+    tr = SLOTracker(reg, target_attainment=0.9, windows=(60.0,),
+                    clock=lambda: t["now"])
+    t["now"] = 105.0
+    # tenant a: two met, one TTFT miss — all 5 output tokens each
+    assert tr.observe(_finished(1, slo_ttft=1.0, slo_tpot=0.5))
+    assert tr.observe(_finished(2, slo_ttft=1.0))
+    assert not tr.observe(_finished(3, ttft=2.0, slo_ttft=1.0))
+    # tenant b: no declared SLO -> vacuously met
+    assert tr.observe(_finished(4, tenant="b"))
+    t["now"] = 110.0                       # 10s since construction
+    assert tr.attainment("a") == pytest.approx(2 / 3)
+    assert tr.attainment() == pytest.approx(3 / 4)
+    assert tr.goodput("a") == pytest.approx(10 / 10.0)   # met tokens / wall
+    assert tr.goodput("a", wall_s=5.0) == pytest.approx(2.0)
+    # burn rate: 1 miss / 3 requests over the window, budget 0.1
+    assert tr.burn_rate(60.0, "a") == pytest.approx((1 / 3) / 0.1)
+    assert tr.burn_rate(60.0, "b") == 0.0
+    snap = reg.snapshot()
+    assert snap["slo.requests{priority=0,tenant=a}"] == 3
+    assert snap["slo.requests_met{priority=0,tenant=a}"] == 2
+    assert snap["slo.ttft_miss{priority=0,tenant=a}"] == 1
+    assert snap["slo.tokens_met{priority=0,tenant=a}"] == 10
+    assert snap["slo.burn_rate{tenant=a,window=60}"] == \
+        pytest.approx((1 / 3) / 0.1)
+    d = tr.as_dict("a")
+    assert d["requests"] == 3 and d["tokens_out"] == 15
+    assert tr.tenants() == ["a", "b"]
+
+
+def test_request_slo_met_semantics():
+    assert request_slo_met(_finished(1))                       # no SLO
+    assert request_slo_met(_finished(2, slo_ttft=1.0, slo_tpot=0.5))
+    assert not request_slo_met(_finished(3, ttft=2.0, slo_ttft=1.0))
+    assert not request_slo_met(_finished(4, tpot=1.0, slo_tpot=0.5))
+
+
+def test_engine_drain_feeds_slo_tracker(cfg):
+    reg = MetricsRegistry()
+    eng = _mk_engine(cfg, registry=reg)
+    reqs = _mk_requests(cfg, 4)
+    for r in reqs:
+        r.slo_ttft_s, r.slo_tpot_s = 60.0, 60.0    # unmissable on CI
+        eng.submit(r)
+    eng.drain()
+    assert eng.slo.attainment() == 1.0
+    assert eng.slo.goodput() > 0.0
+    assert reg.snapshot()["slo.requests_met{priority=0,tenant=default}"] == 4
+
+
+# ----------------------------------------------------------------------
+# watchdog fault injection
+# ----------------------------------------------------------------------
+def test_watchdog_silent_on_clean_drain(cfg):
+    reg = MetricsRegistry()
+    eng = _mk_engine(cfg, registry=reg)
+    for r in _mk_requests(cfg, 3):
+        eng.submit(r)
+    eng.drain()
+    wd = Watchdog([eng], strict=True, stall_s=30.0, queue_age_s=60.0)
+    assert wd.check_now() == []            # strict mode: would raise
+    assert "obs.anomaly{kind=stuck_request}" not in reg.snapshot()
+
+
+def test_watchdog_flags_stuck_request_and_dump_names_slot(cfg, tmp_path):
+    reg = MetricsRegistry()
+    rec = FlightRecorder()
+    eng = _mk_engine(cfg, registry=reg)
+    req = _mk_requests(cfg, 1, new_tokens=8)[0]
+    eng.submit(req)
+    eng.step()                             # admit + one decode round
+    occupied = [i for i, s in enumerate(eng.slots) if s is not None]
+    assert occupied, "request should be seated in a slot"
+    req.last_token_s -= 100.0              # inject: no progress for 100s
+    wd = Watchdog([eng], strict=True, stall_s=30.0, recorder=rec,
+                  dump_path=tmp_path / "dump.json")
+    with pytest.raises(WatchdogError) as ei:
+        wd.check_now()
+    kinds = {a["kind"] for a in ei.value.anomalies}
+    assert "stuck_request" in kinds
+    stuck = next(a for a in ei.value.anomalies
+                 if a["kind"] == "stuck_request")
+    assert stuck["slot"] == occupied[0] and stuck["rid"] == req.rid
+    assert reg.snapshot()["obs.anomaly{kind=stuck_request}"] == 1
+    # the anomaly triggered a postmortem dump that names the stuck slot
+    doc = json.loads((tmp_path / "dump.json").read_text())
+    assert validate_bundle(doc) == []
+    assert doc["reason"] == "watchdog_anomaly"
+    anomalies = [e for e in doc["events"] if e["kind"] == "anomaly"]
+    assert any(e.get("slot") == occupied[0] and e.get("rid") == req.rid
+               for e in anomalies)
+    req.last_token_s += 100.0              # undo; finish cleanly
+    eng.drain()
+    assert wd.check_now() == []
+
+
+def test_watchdog_flags_leaked_kv_block(cfg):
+    eng = _mk_engine(cfg, registry=MetricsRegistry())
+    for r in _mk_requests(cfg, 2):
+        eng.submit(r)
+    eng.drain()
+    assert eng.pool.check_invariants() == []
+    leaked = eng.pool._free.pop()          # inject: block vanishes untracked
+    wd = Watchdog([eng], strict=True)
+    with pytest.raises(WatchdogError) as ei:
+        wd.check_now()
+    assert {a["kind"] for a in ei.value.anomalies} == {"kv_invariant"}
+    assert "partition" in ei.value.anomalies[0]["violations"][0]
+    eng.pool._free.append(leaked)          # undo the injection
+    assert wd.check_now() == []
+
+
+def test_watchdog_flags_stale_queue(cfg):
+    eng = _mk_engine(cfg, registry=MetricsRegistry())
+    req = _mk_requests(cfg, 1)[0]
+    eng.submit(req)                        # queued, never stepped
+    req.submit_s -= 100.0
+    req.arrival_s -= 100.0
+    wd = Watchdog([eng], strict=False, queue_age_s=60.0)
+    kinds = {a["kind"] for a in wd.check_now()}
+    assert "queue_stall" in kinds
+    eng.drain()
+
+
+def test_watchdog_background_thread_counts(cfg):
+    eng = _mk_engine(cfg, registry=MetricsRegistry())
+    wd = Watchdog([eng], interval_s=0.01)
+    wd.start()
+    time.sleep(0.1)
+    wd.stop()
+    assert wd.checks_run >= 2
+
+
+# ----------------------------------------------------------------------
+# flight recorder
+# ----------------------------------------------------------------------
+def test_flightrec_ring_overflow_counts_drops():
+    rec = FlightRecorder(capacity=4)
+    for i in range(10):
+        rec.record("admit", rid=i)
+    evs = rec.events()
+    assert len(evs) == 4 and rec.dropped_events == 6
+    assert [e["rid"] for e in evs] == [6, 7, 8, 9]     # oldest dropped
+
+
+def test_flightrec_bundle_schema_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("x.hits").inc(3)
+    rec = FlightRecorder(capacity=16)
+    rec.record("switch", expert="e1", stall_s=0.5)
+    rec.add_state_provider("slots", lambda: {"free": 2})
+    rec.add_state_provider("broken", lambda: 1 / 0)
+    path = rec.dump(tmp_path / "flight.json", reg, reason="test")
+    doc = json.loads(path.read_text())
+    assert validate_bundle(doc) == []
+    assert doc["reason"] == "test"
+    assert doc["metrics"]["x.hits"] == 3
+    assert doc["state"]["slots"] == {"free": 2}
+    assert "ZeroDivisionError" in doc["state"]["broken"]["error"]
+    assert doc["events"][0]["kind"] == "switch"
+
+
+def test_validate_bundle_catches_malformed():
+    assert validate_bundle([]) == ["bundle is not an object"]
+    problems = validate_bundle({"schema": "wrong", "events": [{"x": 1}]})
+    assert any("schema" in p for p in problems)
+    assert any("missing kind/ts" in p for p in problems)
+    assert any("metrics" in p for p in problems)
+
+
+def test_engine_drain_lands_flight_events(cfg):
+    old = flightrec.set_recorder(FlightRecorder())
+    try:
+        eng = _mk_engine(cfg, registry=MetricsRegistry())
+        for r in _mk_requests(cfg, 3):
+            eng.submit(r)
+        done = eng.drain()
+        kinds = {e["kind"] for e in flightrec.get_recorder().events()}
+        assert {"admit", "done"} <= kinds
+        dones = [e for e in flightrec.get_recorder().events()
+                 if e["kind"] == "done"]
+        assert {e["rid"] for e in dones} == {r.rid for r in done}
+    finally:
+        flightrec.set_recorder(old)
+
+
+# ----------------------------------------------------------------------
+# trace-ring drop accounting
+# ----------------------------------------------------------------------
+def test_trace_ring_overflow_counted_and_exported():
+    old = trace.set_tracer(Tracer(buffer_size=4))
+    try:
+        reg = MetricsRegistry()
+        trace.register_metrics(reg)
+        trace.enable()
+        for i in range(10):
+            trace.instant("tick", i=i)
+        trace.disable()
+        assert trace.dropped_events() == 6
+        assert len(trace.events()) == 4
+        doc = trace.get_tracer().to_chrome_trace()
+        assert doc["metadata"]["trace.dropped_events"] == 6
+        assert reg.snapshot()["trace.dropped_events"] == 6
+        trace.get_tracer().clear()
+        assert trace.dropped_events() == 0
+    finally:
+        trace.set_tracer(old)
+
+
+# ----------------------------------------------------------------------
+# HTTP endpoints: /readyz + /debug/*
+# ----------------------------------------------------------------------
+def _get(url):
+    with urllib.request.urlopen(url, timeout=5) as resp:
+        return resp.status, resp.read()
+
+
+def test_httpd_readyz_and_debug_endpoints(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("x.hits").inc()
+    rec = FlightRecorder()
+    rec.record("admit", rid=1)
+    state = {"warm": False}
+    srv = serve_metrics(reg, port=0, ready_check=lambda: state["warm"],
+                        debug={"slots": lambda: {"active": 1}},
+                        recorder=rec)
+    try:
+        base = srv.url
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{base}/readyz")
+        assert ei.value.code == 503                    # still warming
+        assert _get(f"{base}/healthz")[0] == 200       # but alive
+        state["warm"] = True
+        status, body = _get(f"{base}/readyz")
+        assert status == 200 and body == b"ready\n"
+
+        status, body = _get(f"{base}/debug/slots")
+        assert status == 200 and json.loads(body) == {"active": 1}
+        status, body = _get(f"{base}/debug/flight")
+        doc = json.loads(body)
+        assert validate_bundle(doc) == []
+        assert doc["events"][0]["rid"] == 1
+        # index lists every mounted endpoint
+        idx = json.loads(_get(f"{base}/")[1])
+        assert "/readyz" in idx["endpoints"]
+        assert "/debug/slots" in idx["endpoints"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{base}/debug/nope")
+        assert ei.value.code == 404
+        # a provider raising is a 500 with the error captured, not a crash
+        srv.add_debug("boom", lambda: 1 / 0)
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _get(f"{base}/debug/boom")
+        assert ei.value.code == 500
+    finally:
+        srv.stop()
+
+
+def test_engine_debug_providers_snapshot(cfg):
+    eng = _mk_engine(cfg, registry=MetricsRegistry())
+    for r in _mk_requests(cfg, 2):
+        eng.submit(r)
+    eng.drain()
+    provs = eng.debug_providers()
+    assert set(provs) == {"slots", "pool", "sessions"}
+    slots = provs["slots"]()
+    assert len(slots["slots"]) == eng.n_slots
+    assert all(s["state"] == "free" for s in slots["slots"])
+    pool = provs["pool"]()
+    assert pool["invariant_violations"] == []
+    assert pool["blocks_in_use"] == 0                  # clean drain
+    json.dumps({n: f() for n, f in provs.items()})     # JSON-able
+
+
+def test_engine_warmed_flag_feeds_readyz(cfg):
+    eng = _mk_engine(cfg, registry=MetricsRegistry())
+    assert not eng.warmed
+    eng.warmup()
+    assert eng.warmed
+
+
+# ----------------------------------------------------------------------
+# SIGUSR2 postmortem dump (launch/serve.py)
+# ----------------------------------------------------------------------
+@pytest.mark.skipif(not hasattr(signal, "SIGUSR2"),
+                    reason="platform lacks SIGUSR2")
+def test_sigusr2_dumps_flight_bundle(cfg, tmp_path):
+    from repro.launch.serve import install_flight_dump_signal
+
+    old_rec = flightrec.set_recorder(FlightRecorder())
+    prev = signal.getsignal(signal.SIGUSR2)
+    try:
+        reg = MetricsRegistry()
+        eng = _mk_engine(cfg, registry=reg)
+        req = _mk_requests(cfg, 1, new_tokens=8)[0]
+        eng.submit(req)
+        eng.step()                          # leave a live, seated slot
+        for name, fn in eng.debug_providers().items():
+            flightrec.add_state_provider(name, fn)
+        out = tmp_path / "sig.json"
+        assert install_flight_dump_signal(out, registry=reg) \
+            == signal.SIGUSR2
+        signal.raise_signal(signal.SIGUSR2)
+        doc = json.loads(out.read_text())
+        assert validate_bundle(doc) == []
+        assert doc["reason"] == "signal"
+        # the bundle's state snapshot names the busy slot and its rid
+        busy = [s for s in doc["state"]["slots"]["slots"]
+                if s["state"] == "decoding"]
+        assert busy and busy[0]["rid"] == req.rid
+        assert doc["state"]["pool"]["blocks_in_use"] > 0
+        eng.drain()
+    finally:
+        signal.signal(signal.SIGUSR2, prev)
+        flightrec.set_recorder(old_rec)
+
+
+# ----------------------------------------------------------------------
+# check_bench --update-baseline
+# ----------------------------------------------------------------------
+def test_check_bench_update_baseline(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({
+        "comment": ["keep me"],
+        "metrics": {
+            "a:tps": {"value": 100, "threshold": 0.5},
+            "a:p99": {"value": 0.2, "threshold": 1.0,
+                      "higher_is_better": False},
+            "a:gone": {"value": 7, "threshold": 0.1},
+        }}))
+    results = tmp_path / "results"
+    results.mkdir()
+    (results / "bench_x.json").write_text(json.dumps({
+        "metrics": {"a:tps": 140.0, "a:p99": 0.15, "a:new": 3.0}}))
+
+    run = lambda *extra: subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_bench.py"),
+         "--baseline", str(baseline), *extra, str(results)],
+        capture_output=True, text=True, cwd=REPO)
+    r = run("--update-baseline")
+    assert r.returncode == 0, r.stdout + r.stderr
+    doc = json.loads(baseline.read_text())
+    assert doc["comment"] == ["keep me"]                   # preserved
+    assert doc["metrics"]["a:tps"] == {"value": 140.0, "threshold": 0.5}
+    assert doc["metrics"]["a:p99"]["higher_is_better"] is False
+    assert doc["metrics"]["a:p99"]["value"] == 0.15
+    assert doc["metrics"]["a:new"]["value"] == 3.0         # added
+    assert doc["metrics"]["a:gone"]["value"] == 7          # untouched
+
+    # gating against the refreshed baseline: only the dropped metric fails
+    r = run()
+    assert r.returncode == 1
+    assert "a:gone" in r.stdout and "MISSING" in r.stdout
+    assert r.stdout.count("REGRESSION") == 0

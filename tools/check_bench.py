@@ -22,6 +22,14 @@ dropped benchmark must not pass the gate.
     python tools/check_bench.py [--baseline benchmarks/baseline.json]
         [--threshold 0.30] results/bench_arrival.json results/bench_switching.json
 
+``--update-baseline`` rewrites the baseline's values from the measured
+results instead of gating: each already-gated metric keeps its per-metric
+``threshold`` and ``higher_is_better`` (only ``value`` changes), metrics
+new to the results are added with the default band, baseline metrics the
+results did not produce are left untouched, and the ``comment`` block is
+preserved. Result arguments may be directories — every ``bench_*.json``
+inside is merged.
+
 Exit code 0 = pass, 1 = regression/missing metric, 2 = bad invocation.
 """
 from __future__ import annotations
@@ -30,6 +38,21 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+
+def expand_result_paths(paths):
+    """Expand directory arguments into their ``bench_*.json`` files."""
+    out = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            found = sorted(p.glob("bench_*.json"))
+            if not found:
+                raise FileNotFoundError(f"no bench_*.json under {p}")
+            out.extend(found)
+        else:
+            out.append(p)
+    return out
 
 
 def load_metrics(paths):
@@ -42,6 +65,33 @@ def load_metrics(paths):
             raise SystemExit(f"duplicate metric keys across inputs: {dup}")
         merged.update(metrics)
     return merged
+
+
+def update_baseline(base_doc: dict, current: dict,
+                    default_threshold: float) -> list:
+    """Rewrite baseline values in place from measured ``current`` metrics;
+    returns report lines. Per-metric bands and gate directions survive the
+    update — only the reference values move."""
+    baseline = base_doc.setdefault("metrics", {})
+    lines = []
+    for name in sorted(current):
+        cur = round(float(current[name]), 6)
+        ref = baseline.get(name)
+        if ref is None:
+            baseline[name] = {"value": cur, "threshold": default_threshold}
+            lines.append(f"{'added':10s} {name}: {cur:g} "
+                         f"(band {default_threshold:.0%})")
+        elif isinstance(ref, dict):
+            old = ref.get("value")
+            ref["value"] = cur
+            lines.append(f"{'updated':10s} {name}: {old:g} -> {cur:g} "
+                         f"(band/direction kept)")
+        else:
+            baseline[name] = cur
+            lines.append(f"{'updated':10s} {name}: {float(ref):g} -> {cur:g}")
+    for name in sorted(set(baseline) - set(current)):
+        lines.append(f"{'kept':10s} {name}: not in results, unchanged")
+    return lines
 
 
 def check(current: dict, baseline: dict, threshold: float):
@@ -93,6 +143,10 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--threshold", type=float, default=0.30,
                     help="allowed fractional regression (default 0.30)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline's values from the measured "
+                    "results (bands/directions/comment preserved) instead "
+                    "of gating")
     args = ap.parse_args(argv)
 
     try:
@@ -102,10 +156,20 @@ def main(argv=None) -> int:
         return 2
     baseline = base_doc["metrics"] if "metrics" in base_doc else base_doc
     try:
-        current = load_metrics(args.results)
+        current = load_metrics(expand_result_paths(args.results))
     except FileNotFoundError as e:
-        print(f"check_bench: missing results file: {e.filename}")
+        print(f"check_bench: missing results file: "
+              f"{getattr(e, 'filename', None) or e}")
         return 2
+
+    if args.update_baseline:
+        lines = update_baseline(base_doc, current, args.threshold)
+        Path(args.baseline).write_text(json.dumps(base_doc, indent=2) + "\n")
+        print(f"check_bench: baseline {args.baseline} updated "
+              f"({len(current)} measured metrics)")
+        for line in lines:
+            print("  " + line)
+        return 0
 
     failures, lines = check(current, baseline, args.threshold)
     print(f"check_bench: {len(baseline)} gated metrics, "
